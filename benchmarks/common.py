@@ -1,0 +1,25 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+
+def timeit(fn: Callable, warmup: int = 1, iters: int = 5) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def emit(rows: List[tuple]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+def geomean(xs) -> float:
+    import math
+    xs = [x for x in xs if x > 0]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 0.0

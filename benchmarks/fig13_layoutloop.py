@@ -1,0 +1,53 @@
+"""Fig. 13 — Layoutloop comparison: FEATHER vs NVDLA / Eyeriss / SIGMA
+variants (fixed layouts, off-chip reorder, line rotation, transpose,
+row-reorder) on BERT / ResNet-50 / MobileNet-V3."""
+from __future__ import annotations
+
+from repro.core.accel_models import ALL_MODELS, FEATHER
+from repro.core.workloads import bert_layers, mobilenet_v3_layers, \
+    resnet50_layers
+
+from .common import emit, geomean
+
+
+def run(quick: bool = True):
+    nets = {
+        "bert": bert_layers(layers_sampled=1 if quick else 4),
+        "resnet50": resnet50_layers()[:6 if quick else None],
+        "mobv3": mobilenet_v3_layers()[:6 if quick else None],
+    }
+    table = {}
+    for net_name, layers in nets.items():
+        fr = FEATHER.run(layers)
+        f_cycles = sum(r.metrics.cycles for r in fr)
+        f_energy = sum(r.metrics.energy_pj for r in fr)
+        f_util = geomean([r.metrics.utilization for r in fr])
+        table[(net_name, "FEATHER")] = {
+            "latency_x": 1.0, "energy_x": 1.0, "util": f_util,
+            "slowdown": geomean([r.metrics.slowdown for r in fr])}
+        for model in ALL_MODELS:
+            if model.name == "FEATHER":
+                continue
+            res = model.run(layers)
+            table[(net_name, model.name)] = {
+                "latency_x": sum(r.metrics.cycles for r in res) / f_cycles,
+                "energy_x": sum(r.metrics.energy_pj for r in res) / f_energy,
+                "util": geomean([r.metrics.utilization for r in res]),
+                "slowdown": geomean([r.metrics.slowdown for r in res]),
+            }
+    return table
+
+
+def main(quick: bool = True):
+    table = run(quick)
+    rows = []
+    for (net, model), v in sorted(table.items()):
+        rows.append((f"fig13.{net}.{model}", v["latency_x"],
+                     f"energy_x={v['energy_x']:.2f};util={v['util']:.2f};"
+                     f"slowdown={v['slowdown']:.2f}"))
+    emit(rows)
+    return table
+
+
+if __name__ == "__main__":
+    main()

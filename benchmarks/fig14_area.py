@@ -1,0 +1,55 @@
+"""Fig. 14a + Tab. V — reduction-network and FEATHER area/power scaling."""
+from __future__ import annotations
+
+from repro.core.birrd import art_cost, birrd_cost, fan_cost
+
+from .common import emit
+
+# Post-PnR anchors from paper Tab. V (TSMC 28nm, um^2 / mW)
+TABLE_V = {
+    (4, 4): (24693.98, 16.28), (8, 8): (97976.46, 65.25),
+    (16, 16): (475897.19, 323.48), (16, 32): (965665.10, 655.55),
+    (32, 32): (2727906.70, 961.70), (64, 64): (18389176.19, 13200.0),
+    (64, 128): (36920519.69, 26400.0),
+}
+
+
+def feather_area_model(aw: int, ah: int) -> float:
+    """Area ~ alpha*PE + beta*BIRRD + gamma*buffers; calibrated on 16x16."""
+    a16 = TABLE_V[(16, 16)][0]
+    pe_area = 0.90 * a16 / 256          # PEs + local regs dominate (90%)
+    birrd_16 = 0.04 * a16               # die share from the paper
+    per_egg = birrd_16 / birrd_cost(16).switches
+    other = 0.06 * a16
+    return (pe_area * aw * ah + per_egg * birrd_cost(aw).switches
+            + other * (aw * ah / 256))
+
+
+def run():
+    rows = []
+    for aw in (8, 16, 32, 64):
+        b, f, a = birrd_cost(aw), fan_cost(aw), art_cost(aw)
+        rows.append(("fig14a.birrd_%d" % aw, b.area_um2,
+                     f"stages={b.stages};vs_fan={b.area_um2/f.area_um2:.2f}x;"
+                     f"vs_art={b.area_um2/a.area_um2:.2f}x"))
+    # model vs paper Tab. V anchors
+    for (aw, ah), (area, power) in sorted(TABLE_V.items()):
+        est = feather_area_model(aw, ah)
+        rows.append((f"tab5.feather_{aw}x{ah}", est,
+                     f"paper_um2={area:.0f};ratio={est/area:.2f}"))
+    # the 6%-overhead claim: BIRRD + control vs an Eyeriss-like fixed array
+    a16 = TABLE_V[(16, 16)][0]
+    overhead = (0.04 + 0.02) * a16 / (a16 * 0.94)
+    rows.append(("fig14b.birrd_overhead_vs_fixed", overhead * 100,
+                 "paper=6%"))
+    return rows
+
+
+def main():
+    rows = run()
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

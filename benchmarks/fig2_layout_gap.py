@@ -1,0 +1,60 @@
+"""Fig. 2 — theory/practice latency gap from ignoring layout.
+
+Four bars over ResNet-50 on a 16x16 array:
+  fixed        one dataflow + one layout everywhere (blue)
+  theory       per-layer best dataflow, layout effects ignored (green)
+  practice     the same dataflows, with bank conflicts charged (yellow)
+  feather      per-layer (dataflow, layout) co-switching + RIR (red)
+"""
+from __future__ import annotations
+
+from repro.core.dataflow import Dataflow, enumerate_dataflows
+from repro.core.layout import Layout, conv_layout_space
+from repro.core.layoutloop import EvalConfig, cosearch_layer, evaluate
+from repro.core.workloads import resnet50_layers
+
+from .common import emit, geomean
+
+
+def run(layers=None):
+    layers = layers or resnet50_layers()[:8]
+    fixed_layout = Layout.parse("HWC_C32")
+    fixed_df = Dataflow(spatial=(("C", 16), ("M", 16)), name="CxM-fixed")
+    cfg_none = EvalConfig(reorder="none")
+    cfg_rir = EvalConfig(reorder="rir")
+
+    fixed = theory = practice = feather = 0.0
+    worst_gap = 0.0
+    for wl in layers:
+        fixed += evaluate(wl, fixed_df, fixed_layout, cfg_none).cycles
+        # mapper that ignores layout: pick dataflow by pure utilization
+        best_df = max(enumerate_dataflows(wl, 256),
+                      key=lambda d: d.theoretical_utilization(wl, 256))
+        m_theory = evaluate(wl, best_df, fixed_layout,
+                            EvalConfig(reorder="rir"))  # conflict-free ideal
+        theory += m_theory.cycles
+        m_prac = evaluate(wl, best_df, fixed_layout, cfg_none)
+        practice += m_prac.cycles
+        worst_gap = max(worst_gap, m_prac.cycles / m_theory.cycles)
+        feather += cosearch_layer(wl, cfg_rir).metrics.cycles
+    return {"fixed": fixed, "theory": theory, "practice": practice,
+            "feather": feather, "worst_layer_gap": worst_gap}
+
+
+def main():
+    r = run()
+    rows = [
+        ("fig2.fixed_dataflow_cycles", r["fixed"], ""),
+        ("fig2.flexible_theory_cycles", r["theory"],
+         f"reduction_vs_fixed={1 - r['theory'] / r['fixed']:.2%}"),
+        ("fig2.flexible_practice_cycles", r["practice"],
+         f"gap_vs_theory={r['practice'] / r['theory']:.1f}x"),
+        ("fig2.feather_cycles", r["feather"],
+         f"worst_layer_gap={r['worst_layer_gap']:.0f}x"),
+    ]
+    emit(rows)
+    return r
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Generate the EXPERIMENTS.md §Dry-run + §Roofline tables from results/."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.core.tpu_cost import terms_from_counts
+
+
+def _tokens(shape: str) -> float:
+    from repro.configs.base import shape_by_name
+    cell = shape_by_name(shape)
+    if cell.kind in ("train", "prefill"):
+        return cell.seq_len * cell.global_batch
+    return cell.global_batch
+
+
+def tables(results_dir="results/dryrun"):
+    rows = []
+    for f in sorted(pathlib.Path(results_dir).glob("*.json")):
+        d = json.loads(f.read_text())
+        t = terms_from_counts(d["hlo_flops_per_device"],
+                              d["hlo_bytes_per_device"],
+                              d["collective_bytes_per_device"], d["chips"])
+        mult = 6.0 if d["shape"].startswith("train") else 2.0
+        mf = mult * d["n_params_active"] * _tokens(d["shape"]) / d["chips"]
+        pd = d["per_device"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "hbm": (pd["argument_bytes"] + pd["temp_bytes"]) / 1e9,
+            "args": pd["argument_bytes"] / 1e9,
+            "flops": d["hlo_flops_per_device"],
+            "bytes": d["hlo_bytes_per_device"],
+            "coll": d["collective_bytes_per_device"],
+            "kinds": d.get("collective_kinds", {}),
+            "compile_s": d.get("compile_s", 0),
+            "comp_s": t.compute_s, "mem_s": t.memory_s,
+            "coll_s": t.collective_s, "dom": t.dominant,
+            "useful": mf / max(d["hlo_flops_per_device"], 1.0),
+        })
+    return rows
+
+
+def dryrun_md(rows):
+    out = ["| arch | shape | mesh | compile | HBM/chip | args | HLO GFLOP/chip"
+           " | coll GB/chip | top collectives |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        kinds = sorted(r["kinds"].items(), key=lambda kv: -kv[1])[:2]
+        ks = ", ".join(f"{k} {v/1e9:.0f}G" for k, v in kinds) or "-"
+        flag = " **(>16G)**" if r["hbm"] > 16 else ""
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']:.0f}s | {r['hbm']:.1f}G{flag} | "
+            f"{r['args']:.1f}G | {r['flops']/1e9:.0f} | "
+            f"{r['coll']/1e9:.1f} | {ks} |")
+    return "\n".join(out)
+
+
+def roofline_md(rows, mesh="16x16"):
+    out = ["| arch | shape | compute s | memory s | collective s | dominant |"
+           " MODEL/HLO flops | bound-MFU |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        bound = max(r["comp_s"], r["mem_s"], r["coll_s"])
+        mfu = r["comp_s"] / bound if bound else 0
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['comp_s']:.3f} | "
+            f"{r['mem_s']:.3f} | {r['coll_s']:.3f} | **{r['dom']}** | "
+            f"{r['useful']:.2f} | {mfu:.2f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows = tables()
+    print("## Dry-run\n")
+    print(dryrun_md(rows))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_md(rows))

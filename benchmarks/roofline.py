@@ -1,0 +1,81 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun) and derives the
+three terms per (arch x shape x mesh):
+
+    compute_s    = HLO_FLOPs / peak_FLOPs            (per chip)
+    memory_s     = HLO_bytes / HBM_bw                (per chip)
+    collective_s = collective_bytes / (links x ICI)  (per chip)
+
+plus the dominant bottleneck and MODEL_FLOPS / HLO_FLOPs usefulness ratio.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+from repro.core.tpu_cost import RooflineTerms, model_flops, terms_from_counts
+
+from .common import emit
+
+RESULTS = pathlib.Path("results/dryrun")
+
+
+def _tokens(shape: str) -> float:
+    from repro.configs.base import shape_by_name
+    cell = shape_by_name(shape)
+    if cell.kind == "train":
+        return cell.seq_len * cell.global_batch
+    if cell.kind == "prefill":
+        return cell.seq_len * cell.global_batch
+    return cell.global_batch  # decode: one token per sequence
+
+
+def load_rows(results_dir: pathlib.Path = RESULTS) -> List[Dict]:
+    rows = []
+    for f in sorted(results_dir.glob("*.json")):
+        d = json.loads(f.read_text())
+        chips = d["chips"]
+        terms = terms_from_counts(
+            d["hlo_flops_per_device"], d["hlo_bytes_per_device"],
+            d["collective_bytes_per_device"], chips)
+        # train step does fwd+bwd (+ remat fwd): ~8x params x tokens if
+        # full remat; MODEL_FLOPS uses the assignment's 6*N*D convention
+        mult = 6.0 if d["shape"].startswith("train") else 2.0
+        mf = mult * d["n_params_active"] * _tokens(d["shape"]) / chips
+        hbm_gb = (d["per_device"]["argument_bytes"]
+                  + d["per_device"]["temp_bytes"]) / 1e9
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s,
+            "dominant": terms.dominant,
+            "model_flops_ratio": mf / max(d["hlo_flops_per_device"], 1.0),
+            "hbm_gb": hbm_gb,
+            "fits_16gb": hbm_gb <= 16.0,
+            "compile_s": d.get("compile_s", 0.0),
+            "collective_kinds": d.get("collective_kinds", {}),
+        })
+    return rows
+
+
+def main(results_dir: pathlib.Path = RESULTS):
+    rows = load_rows(results_dir)
+    out = []
+    for r in rows:
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / bound if bound else 0.0
+        out.append((
+            f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}",
+            bound * 1e6,
+            f"dom={r['dominant']};comp={r['compute_s']:.4f}s;"
+            f"mem={r['memory_s']:.4f}s;coll={r['collective_s']:.4f}s;"
+            f"useful={r['model_flops_ratio']:.2f};hbm={r['hbm_gb']:.1f}GB;"
+            f"mfu_bound={frac:.2f}"))
+    emit(out)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

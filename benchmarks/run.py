@@ -1,0 +1,42 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  The "us" column carries the
+natural unit of each benchmark (cycles for the Layoutloop analytic models,
+microseconds for kernel wall times, area for the PnR table) — the derived
+column says which.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (fig2_layout_gap, fig4_mappings, fig10_gemm_util,
+                   fig12_fixed_dataflow, fig13_layoutloop, fig14_area,
+                   kernels_bench, roofline)
+    suites = [
+        ("fig2 (layout gap)", fig2_layout_gap.main),
+        ("fig4 (mapping table)", fig4_mappings.main),
+        ("fig10 (GEMM utilization)", fig10_gemm_util.main),
+        ("fig12 (vs fixed dataflow)", fig12_fixed_dataflow.main),
+        ("fig13 (Layoutloop comparison)", fig13_layoutloop.main),
+        ("fig14/tab5 (area & power)", fig14_area.main),
+        ("kernels (microbench)", kernels_bench.main),
+        ("roofline (dry-run terms)", roofline.main),
+    ]
+    failed = 0
+    for name, fn in suites:
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception:
+            failed += 1
+            print(f"# SUITE FAILED: {name}", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""The paper's core feature, end to end: per-layer (dataflow, layout)
+co-switching with Reorder-In-Reduction.
+
+Part 1 — the accelerator model (paper Fig. 2/13): Layoutloop co-searches a
+(dataflow, layout) pair per ResNet-50 layer and shows the conflict-free
+schedule FEATHER achieves vs a fixed-layout baseline.
+
+Part 2 — the TPU analogue: the RIR matmul writes its output directly in the
+next layer's preferred block layout (zero-cost relayout in the epilogue),
+and the BIRRD kernel performs a grouped reduction + arbitrary reorder pass.
+
+    PYTHONPATH=src python examples/layout_coswitch.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.accel_models import FEATHER, SIGMA_C32
+from repro.core.layoutloop import EvalConfig, cosearch_layer
+from repro.core.workloads import resnet50_layers
+from repro.kernels import ops, ref
+
+
+def part1_layoutloop():
+    print("=== Part 1: Layoutloop (dataflow, layout) co-search ===")
+    layers = resnet50_layers()[:6]
+    total_feather = total_fixed = 0.0
+    for wl in layers:
+        best = cosearch_layer(wl, EvalConfig(reorder="rir"))
+        total_feather += best.metrics.cycles
+        print(f"  {wl.name:18s} -> dataflow={best.dataflow.label():10s} "
+              f"layout={best.layout.name():12s} "
+              f"util={best.metrics.utilization:.2f} "
+              f"slowdown={best.metrics.slowdown:.2f}")
+    fixed = SIGMA_C32.run(layers)
+    total_fixed = sum(r.metrics.cycles for r in fixed)
+    print(f"  co-switched cycles: {total_feather:.3e}  "
+          f"fixed-layout cycles: {total_fixed:.3e}  "
+          f"speedup: {total_fixed / total_feather:.2f}x")
+
+
+def part2_rir_kernels():
+    print("=== Part 2: RIR on TPU-shaped kernels ===")
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(256, 512)), jnp.float32)
+    # the NEXT layer wants N-blocks in order [2, 0, 3, 1] — the producing
+    # matmul writes them there directly; no separate relayout pass runs
+    perm = (2, 0, 3, 1)
+    y = ops.rir_matmul(a, b, perm)
+    plain = a @ b
+    moved = np.allclose(np.asarray(y[:, 2 * 128:3 * 128]),
+                        np.asarray(plain[:, 0:128]), atol=1e-4)
+    print(f"  rir_matmul: consumer layout written in the epilogue: {moved}")
+
+    # BIRRD pass: 4 reduction groups of 4 wires, results scattered to the
+    # banks the next layer's dataflow reads conflict-free
+    x = jnp.asarray(rng.normal(size=(16, 256)), jnp.float32)
+    gids = [i // 4 for i in range(16)]
+    ports = [0, 4, 8, 12]
+    y = ops.birrd_reduce(x, gids, ports)
+    want = np.asarray(ref.birrd_reduce(
+        x, jnp.asarray(gids, jnp.int32), jnp.asarray(ports, jnp.int32), 16))
+    print(f"  birrd_reduce: grouped reduce+reorder matches oracle: "
+          f"{np.allclose(np.asarray(y), want, atol=1e-5)}")
+    print(f"  group sums landed at ports {ports} "
+          f"(junk ports masked to zero): "
+          f"{[round(float(v), 2) for v in np.asarray(y[:, 0])]}")
+
+
+if __name__ == "__main__":
+    part1_layoutloop()
+    part2_rir_kernels()

@@ -1,0 +1,84 @@
+"""Bank-conflict assessment: the concordance test (paper §II-C, §V-B).
+
+A (dataflow, layout) pair is *concordant* when every per-cycle spatial access
+footprint touches at most ``ports`` lines per bank; otherwise the pair is
+*discordant* and each cycle is stretched by ``max(N_L / N_P, 1)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+from .dataflow import ConvWorkload, Dataflow
+from .layout import Buffer, Layout
+
+
+@dataclasses.dataclass(frozen=True)
+class ConflictReport:
+    slowdown: float            # average per-cycle stretch, >= 1.0
+    worst_slowdown: float
+    avg_lines_per_cycle: float # distinct buffer lines touched per cycle
+    concordant: bool
+
+    def practical_utilization(self, theoretical: float) -> float:
+        return theoretical / self.slowdown
+
+
+def assess_iact_conflicts(wl: ConvWorkload, df: Dataflow, layout: Layout,
+                          buffer: Buffer, max_samples: int = 16,
+                          reorder: str = "none") -> ConflictReport:
+    """Average the paper's per-bank slowdown over sampled cycles.
+
+    ``reorder`` models the *read-side* relief each on-chip reorder pattern
+    provides (paper Fig. 5):
+      - "none"          : raw conflicts
+      - "line_rotation" : one conflicting line per bank may be served from a
+                          neighbour bank's spare port (Medusa) -> N_L - 1
+      - "transpose"     : column access of a bank is as cheap as row access;
+                          conflicts count against the transposed layout too and
+                          the better orientation wins (MTIA / TPUv4)
+      - "row_reorder"   : data may be permuted within a line; does not reduce
+                          the number of lines accessed (TPUv4) -> no relief
+      - "arbitrary"     : full relayout available (FEATHER w/ RIR): concordant
+                          by construction -> slowdown 1
+    """
+    if reorder == "arbitrary":
+        return ConflictReport(1.0, 1.0, 1.0, True)
+
+    iact_dims = wl.iact_dims()
+    slowdowns, line_counts = [], []
+    for base in df.temporal_samples(wl, max_samples):
+        coords = [wl.iact_coord(pt) for pt in df.spatial_footprint(wl, base)]
+        lines = layout.lines_for(coords, iact_dims)
+        per_bank: dict[int, int] = {}
+        for ln in lines:
+            b = buffer.bank_of(ln)
+            per_bank[b] = per_bank.get(b, 0) + 1
+        if reorder == "line_rotation":
+            per_bank = {b: max(1, n - 1) for b, n in per_bank.items()}
+        sd = max((max(n / buffer.ports, 1.0) for n in per_bank.values()),
+                 default=1.0)
+        if reorder == "transpose":
+            # transposed orientation: lines<->offsets swap; a footprint confined
+            # to few offsets reads few "columns" instead.
+            t_layout = Layout(inter=tuple(d for d, _ in layout.intra) or layout.inter,
+                              intra=tuple((d, 1) for d in layout.inter))
+            t_lines = t_layout.lines_for(coords, iact_dims)
+            t_per_bank: dict[int, int] = {}
+            for ln in t_lines:
+                b = buffer.bank_of(ln)
+                t_per_bank[b] = t_per_bank.get(b, 0) + 1
+            t_sd = max((max(n / buffer.ports, 1.0) for n in t_per_bank.values()),
+                       default=1.0)
+            sd = min(sd, t_sd)
+        slowdowns.append(sd)
+        line_counts.append(len(lines))
+    avg_sd = sum(slowdowns) / len(slowdowns) if slowdowns else 1.0
+    worst = max(slowdowns, default=1.0)
+    avg_lines = sum(line_counts) / len(line_counts) if line_counts else 0.0
+    return ConflictReport(avg_sd, worst, avg_lines, worst <= 1.0)
+
+
+def concordant(wl: ConvWorkload, df: Dataflow, layout: Layout,
+               buffer: Buffer) -> bool:
+    return assess_iact_conflicts(wl, df, layout, buffer).concordant

@@ -1,0 +1,178 @@
+"""Dataflow descriptors: Tiling / Ordering / Parallelism / Shape (paper §II-A, Fig. 1).
+
+A dataflow is a transformed loop nest over the 7 convolution dims
+``N, M, C, P, Q, R, S`` (iActs are indexed by ``H = P*stride + R``,
+``W = Q*stride + S``) or the 3 GEMM dims ``M, N, K``.
+
+* ``spatial``  — (dim, factor) pairs unrolled over the PE array       (P, S of TOPS)
+* ``order``    — temporal loop order, outermost first                 (O)
+* ``tiles``    — per-dim on-chip tile sizes                           (T)
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Dict, Iterator, Mapping, Sequence, Tuple
+
+CONV_DIMS = ("N", "M", "C", "P", "Q", "R", "S")
+GEMM_DIMS = ("M", "N", "K")
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvWorkload:
+    """One convolution layer (paper Fig. 1 terminology)."""
+
+    N: int = 1
+    M: int = 1
+    C: int = 1
+    P: int = 1
+    Q: int = 1
+    R: int = 1
+    S: int = 1
+    stride: int = 1
+    name: str = "conv"
+
+    @property
+    def H(self) -> int:
+        return (self.P - 1) * self.stride + self.R
+
+    @property
+    def W(self) -> int:
+        return (self.Q - 1) * self.stride + self.S
+
+    def dims(self) -> Dict[str, int]:
+        return {d: getattr(self, d) for d in CONV_DIMS}
+
+    def macs(self) -> int:
+        return self.N * self.M * self.C * self.P * self.Q * self.R * self.S
+
+    def iact_dims(self) -> Dict[str, int]:
+        return {"N": self.N, "C": self.C, "H": self.H, "W": self.W}
+
+    def weight_dims(self) -> Dict[str, int]:
+        return {"M": self.M, "C": self.C, "R": self.R, "S": self.S}
+
+    def oact_dims(self) -> Dict[str, int]:
+        return {"N": self.N, "M": self.M, "P": self.P, "Q": self.Q}
+
+    def iact_coord(self, loop: Mapping[str, int]) -> Dict[str, int]:
+        return {
+            "N": loop.get("N", 0),
+            "C": loop.get("C", 0),
+            "H": loop.get("P", 0) * self.stride + loop.get("R", 0),
+            "W": loop.get("Q", 0) * self.stride + loop.get("S", 0),
+        }
+
+    def oact_coord(self, loop: Mapping[str, int]) -> Dict[str, int]:
+        return {"N": loop.get("N", 0), "M": loop.get("M", 0),
+                "P": loop.get("P", 0), "Q": loop.get("Q", 0)}
+
+    @staticmethod
+    def from_gemm(M: int, N: int, K: int, name: str = "gemm") -> "ConvWorkload":
+        """GEMM == 1x1 conv: out[M, N] = sum_K  W[M, K] @ in[K, N]."""
+        return ConvWorkload(N=1, M=M, C=K, P=N, Q=1, R=1, S=1, name=name)
+
+
+@dataclasses.dataclass(frozen=True)
+class Dataflow:
+    """A TOPS point: spatial unrolling + temporal order (+ optional tiling)."""
+
+    spatial: Tuple[Tuple[str, int], ...]          # (dim, factor), product <= #PE
+    order: Tuple[str, ...] = CONV_DIMS            # temporal order, outer->inner
+    tiles: Tuple[Tuple[str, int], ...] = ()       # on-chip tile sizes (T)
+    name: str = ""
+
+    def spatial_product(self) -> int:
+        return math.prod(f for _, f in self.spatial) if self.spatial else 1
+
+    def spatial_factors(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for d, f in self.spatial:
+            out[d] = out.get(d, 1) * f
+        return out
+
+    def label(self) -> str:
+        if self.name:
+            return self.name
+        return "|".join(f"{d}{f}" for d, f in self.spatial)
+
+    # --------------------------------------------------------------- analysis
+    def theoretical_utilization(self, wl: ConvWorkload, num_pes: int) -> float:
+        """Mapping efficiency over the array: divisibility loss x occupancy."""
+        util = min(1.0, self.spatial_product() / num_pes) if num_pes else 1.0
+        dims = wl.dims()
+        for d, f in self.spatial_factors().items():
+            size = dims[d]
+            used = min(size, f)
+            eff = size / (math.ceil(size / used) * used)
+            util *= eff * used / f if f > used else eff
+        return util
+
+    def spatial_footprint(self, wl: ConvWorkload,
+                          base: Mapping[str, int] | None = None
+                          ) -> Iterator[Dict[str, int]]:
+        """All loop points touched in one cycle (the spatial unroll), offset
+        from temporal position ``base``."""
+        base = dict(base or {})
+        dims = wl.dims()
+        axes, ranges = [], []
+        for d, f in self.spatial:
+            axes.append(d)
+            ranges.append(range(min(f, dims[d])))
+        for combo in itertools.product(*ranges):
+            pt = dict(base)
+            for d, v in zip(axes, combo):
+                pt[d] = pt.get(d, 0) + v
+            yield pt
+
+    def temporal_samples(self, wl: ConvWorkload, max_samples: int = 16
+                         ) -> Iterator[Dict[str, int]]:
+        """Sample temporal base points (tile origins) for conflict averaging."""
+        dims = wl.dims()
+        sf = self.spatial_factors()
+        # iterate innermost temporal dims first for representative samples
+        inner = [d for d in reversed(self.order) if dims[d] > sf.get(d, 1)]
+        count = 0
+        steps = [0] * len(inner)
+        while count < max_samples:
+            base = {}
+            for d, s in zip(inner, steps):
+                base[d] = (s * sf.get(d, 1)) % max(1, dims[d])
+            yield base
+            count += 1
+            # odometer increment over inner dims
+            for i in range(len(inner)):
+                steps[i] += 1
+                limit = max(1, math.ceil(dims[inner[i]] / sf.get(inner[i], 1)))
+                if steps[i] < limit:
+                    break
+                steps[i] = 0
+            else:
+                break
+            if not inner:
+                break
+
+
+def enumerate_dataflows(wl: ConvWorkload, num_pes: int,
+                        max_dims: int = 2,
+                        parallel_dims: Sequence[str] = ("M", "C", "P", "Q"),
+                        ) -> Iterator[Dataflow]:
+    """Generate candidate spatial unrollings for a PE array (pruned TOPS space).
+
+    Factors are powers of two up to the array size; at most ``max_dims`` dims
+    are parallelized, mirroring practical accelerator mappings.
+    """
+    pows = [2 ** i for i in range(int(math.log2(num_pes)) + 1)]
+    seen = set()
+    for k in range(1, max_dims + 1):
+        for dims in itertools.combinations(parallel_dims, k):
+            for factors in itertools.product(pows, repeat=k):
+                if math.prod(factors) != num_pes:
+                    continue
+                key = tuple(sorted(zip(dims, factors)))
+                if key in seen or any(f == 1 for f in factors):
+                    if key in seen:
+                        continue
+                seen.add(key)
+                yield Dataflow(spatial=tuple(zip(dims, factors)))

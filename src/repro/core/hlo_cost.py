@@ -1,0 +1,221 @@
+"""Trip-count-aware cost extraction from compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every loop body ONCE, which
+under-reports scanned-layer models by a factor of n_layers (x microbatches).
+This walker parses the post-optimization HLO, aggregates per-computation
+
+    flops            (dot / convolution, 2 * |out| * |contraction|)
+    traffic bytes    (operands + results of top-level fusions/dots/copies)
+    collective bytes (result bytes of all-gather / all-reduce /
+                      reduce-scatter / all-to-all / collective-permute)
+
+and multiplies ``while`` bodies by their trip counts (parsed from the loop
+condition's comparison constant).  Values are per-partition (the compiled
+module is already SPMD-partitioned).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+                "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+                "c64": 8, "c128": 16, "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s+([\w\-]+)\(")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_kinds: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Costs", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.collective_kinds.items():
+            self.collective_kinds[k] = self.collective_kinds.get(k, 0.0) \
+                + v * mult
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape: str
+    opcode: str
+    line: str
+    operands: List[str]
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[_Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, Costs] = {}
+
+    # ------------------------------------------------------------------ parse
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        comment = re.compile(r"/\*.*?\*/")
+        for raw in text.splitlines():
+            line = comment.sub("", raw).rstrip()
+            if not line:
+                continue
+            hdr = _COMP_HDR.match(line)
+            if hdr and ("{" in line):
+                cur = hdr.group(1)
+                self.comps[cur] = []
+                if line.lstrip().startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                name, shape, opcode = m.group(1), m.group(2), m.group(3)
+                ops = re.findall(r"%([\w.\-]+)", line.split("(", 1)[1])
+                self.comps[cur].append(_Instr(name, shape, opcode, line, ops))
+
+    # ------------------------------------------------------------- trip count
+    def _trip_count(self, cond_comp: str) -> float:
+        """Loop condition compares the induction var against a constant."""
+        best = 1.0
+        for instr in self.comps.get(cond_comp, []):
+            if instr.opcode == "compare":
+                # constants may be inline: compare(%it, s32[] constant(28))
+                for c in re.findall(r"constant\((\d+)\)", instr.line):
+                    best = max(best, float(c))
+                for op in instr.operands:
+                    cdef = self._find(cond_comp, op)
+                    if cdef and cdef.opcode == "constant":
+                        mm = re.search(r"constant\((\d+)\)", cdef.line)
+                        if mm:
+                            best = max(best, float(mm.group(1)))
+        return best
+
+    def _find(self, comp: str, name: str) -> Optional[_Instr]:
+        for instr in self.comps.get(comp, []):
+            if instr.name == name:
+                return instr
+        return None
+
+    # ------------------------------------------------------------------ costs
+    def _dot_flops(self, comp: str, instr: _Instr) -> float:
+        out = 1
+        for d in _shape_dims(instr.shape):
+            out *= d
+        contract = 1
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
+        if m and instr.operands:
+            lhs = self._find(comp, instr.operands[0])
+            if lhs is not None:
+                dims = _shape_dims(lhs.shape)
+                for i in m.group(1).split(","):
+                    if i and int(i) < len(dims):
+                        contract *= dims[int(i)]
+        return 2.0 * out * contract
+
+    def comp_costs(self, comp: str) -> Costs:
+        if comp in self._memo:
+            return self._memo[comp]
+        total = Costs()
+        self._memo[comp] = total  # break cycles defensively
+        for instr in self.comps.get(comp, []):
+            op = instr.opcode
+            if op == "while":
+                body = re.search(r"body=%?([\w.\-]+)", instr.line)
+                ktc = re.search(r'"known_trip_count":\{"n":"(\d+)"\}',
+                                instr.line)
+                if ktc:
+                    trips = float(ktc.group(1))
+                else:
+                    cond = re.search(r"condition=%?([\w.\-]+)", instr.line)
+                    trips = self._trip_count(cond.group(1)) if cond else 1.0
+                if body:
+                    total.add(self.comp_costs(body.group(1)), trips)
+            elif op in ("call", "conditional", "async-start"):
+                for target in re.findall(
+                        r"(?:to_apply|called_computations?|branch_computations)"
+                        r"=\{?%?([\w.\-, %]+)\}?", instr.line):
+                    for t in re.findall(r"[\w.\-]+", target):
+                        if t in self.comps:
+                            total.add(self.comp_costs(t))
+            elif op == "fusion":
+                # traffic: result only (a fused producer streams into its
+                # consumers on TPU — counting its operands too would model a
+                # fusion-free backend and inflate the memory term ~10x);
+                # flops: recurse for dots living inside output fusions
+                total.bytes += _shape_bytes(instr.shape)
+                m = re.search(r"calls=%?([\w.\-]+)", instr.line)
+                if m:
+                    inner = self.comp_costs(m.group(1))
+                    total.flops += inner.flops
+            elif op in ("dot", "convolution"):
+                total.flops += self._dot_flops(comp, instr)
+                total.bytes += self._io_bytes(comp, instr)
+            elif any(op == c or op == c + "-start" for c in COLLECTIVES):
+                kind = op[:-6] if op.endswith("-start") else op
+                nbytes = _shape_bytes(instr.shape)
+                total.collective_bytes += nbytes
+                total.collective_kinds[kind] = \
+                    total.collective_kinds.get(kind, 0.0) + nbytes
+                total.bytes += nbytes
+            elif op in ("copy", "copy-start", "transpose", "reduce", "sort",
+                        "gather", "scatter", "dynamic-slice",
+                        "dynamic-update-slice", "concatenate", "pad", "slice",
+                        "convert", "select-and-scatter", "reduce-window"):
+                total.bytes += _shape_bytes(instr.shape)
+        self._memo[comp] = total
+        return total
+
+    def _io_bytes(self, comp: str, instr: _Instr) -> float:
+        b = _shape_bytes(instr.shape)
+        for opn in instr.operands[:8]:
+            d = self._find(comp, opn)
+            if d is not None:
+                b += _shape_bytes(d.shape)
+        return b
+
+    def totals(self) -> Costs:
+        if not self.entry:
+            return Costs()
+        return self.comp_costs(self.entry)
+
+
+def analyze_hlo(hlo_text: str) -> Costs:
+    return HloCostModel(hlo_text).totals()

@@ -1,0 +1,162 @@
+"""Layoutloop — dataflow x layout co-evaluation and co-search (paper §V).
+
+Extends the Timeloop-style analytical model with:
+  (1) physical storage modeling  (``core.layout.Buffer``: lines, banks, ports),
+  (2) bank-conflict slowdown     (``core.conflicts``),
+  (3) layout-aware energy        (line-level access counting),
+  (4) reordering implementations (none / off-chip / RAR variants / RIR),
+  (5) (dataflow, layout) co-search minimizing EDP per layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from .conflicts import assess_iact_conflicts
+from .dataflow import ConvWorkload, Dataflow, enumerate_dataflows
+from .energy import DEFAULT_ENERGY, EnergyModel
+from .layout import Buffer, Layout, conv_layout_space
+from .nest import NestConfig, nest_cycles
+
+
+@dataclasses.dataclass(frozen=True)
+class Metrics:
+    cycles: float
+    compute_cycles: float
+    reorder_cycles: float          # exposed (critical-path) reorder latency
+    slowdown: float                # bank-conflict stretch (>= 1)
+    utilization: float             # practical steady-state PE utilization
+    energy_pj: float
+    dram_bytes: float
+    line_reads: float
+
+    @property
+    def edp(self) -> float:
+        return self.energy_pj * self.cycles
+
+    @property
+    def pj_per_mac(self) -> float:  # populated by evaluate()
+        return getattr(self, "_pj_per_mac", float("nan"))
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalConfig:
+    nest: NestConfig = NestConfig()
+    buffer: Buffer = Buffer(num_lines=512, line_size=32, conflict_depth=8, ports=2)
+    reorder: str = "none"     # none|offchip|line_rotation|transpose|row_reorder|rir
+    dram_bytes_per_cycle: float = 16.0   # off-chip BW in bytes/cycle
+    energy: EnergyModel = DEFAULT_ENERGY
+    dtype_bytes: int = 1      # int8
+
+
+def evaluate(wl: ConvWorkload, df: Dataflow, layout: Layout,
+             cfg: EvalConfig) -> Metrics:
+    """Latency + energy of one layer under one (dataflow, layout) pair."""
+    e = cfg.energy
+    read_relief = {"none": "none", "offchip": "none", "line_rotation":
+                   "line_rotation", "transpose": "transpose",
+                   "row_reorder": "none", "rir": "arbitrary"}[cfg.reorder]
+    rep = assess_iact_conflicts(wl, df, layout, cfg.buffer, reorder=read_relief)
+    timing = nest_cycles(cfg.nest, wl, df, slowdown=rep.slowdown)
+    compute_cycles = timing.total_cycles
+    util = timing.steady_utilization / rep.slowdown
+
+    iact_words = math.prod(wl.iact_dims().values())
+    w_words = math.prod(wl.weight_dims().values())
+    oact_words = math.prod(wl.oact_dims().values())
+    tensor_bytes = (iact_words + w_words + oact_words) * cfg.dtype_bytes
+
+    active_cycles = max(1.0, timing.total_cycles - timing.weight_load_cycles)
+    line_reads = rep.avg_lines_per_cycle * active_cycles          # iActs
+    line_reads += active_cycles                                   # StrB stream
+    oact_lines = max(1.0, oact_words / cfg.buffer.line_size)
+    line_writes = oact_lines
+
+    reorder_cycles = 0.0
+    extra_energy = 0.0
+    dram_bytes = float(tensor_bytes)
+    if cfg.reorder == "offchip":
+        # oActs round-trip through DRAM for relayout (paper Fig. 6a); latency
+        # overlaps with compute of the next tile, the remainder is exposed.
+        rt_bytes = 2.0 * oact_words * cfg.dtype_bytes
+        rt_cycles = rt_bytes / cfg.dram_bytes_per_cycle
+        reorder_cycles = max(0.0, rt_cycles - 0.9 * compute_cycles)
+        extra_energy += e.dram_bytes_pj(rt_bytes)
+        dram_bytes += rt_bytes
+    elif cfg.reorder in ("line_rotation", "transpose", "row_reorder"):
+        # RAR (paper Fig. 6b): oActs are re-read, pushed through the reorder
+        # unit and re-written — an exposed on-chip pass over the tensor.
+        passes = max(1.0, oact_lines / cfg.buffer.ports)
+        reorder_cycles = passes
+        extra_energy += oact_lines * (e.sram_line_read_pj + e.sram_line_write_pj)
+        line_reads += oact_lines
+        line_writes += oact_lines
+    elif cfg.reorder == "rir":
+        # BIRRD hop energy: each oAct word traverses 2*log2(AW) Egg stages.
+        stages = 2 * int(math.log2(cfg.nest.aw))
+        extra_energy += oact_words * stages * (e.noc_hop_pj + e.adder_pj / 2)
+
+    energy = (
+        wl.macs() * (e.mac_pj + 2 * e.reg_access_pj)
+        + line_reads * e.sram_line_read_pj
+        + line_writes * e.sram_line_write_pj
+        + e.dram_bytes_pj(tensor_bytes)
+        + extra_energy
+    )
+    cycles = compute_cycles + reorder_cycles
+    m = Metrics(cycles=cycles, compute_cycles=compute_cycles,
+                reorder_cycles=reorder_cycles, slowdown=rep.slowdown,
+                utilization=util, energy_pj=energy, dram_bytes=dram_bytes,
+                line_reads=line_reads)
+    object.__setattr__(m, "_pj_per_mac", energy / max(wl.macs(), 1))
+    return m
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    workload: ConvWorkload
+    dataflow: Dataflow
+    layout: Layout
+    metrics: Metrics
+
+
+def cosearch_layer(wl: ConvWorkload, cfg: EvalConfig,
+                   layouts: Optional[Sequence[Layout]] = None,
+                   dataflows: Optional[Iterable[Dataflow]] = None,
+                   layout_fixed: Optional[Layout] = None,
+                   objective: str = "edp") -> SearchResult:
+    """Exhaustive layout x pruned dataflow co-search for one layer (paper §VI-A2)."""
+    layouts = [layout_fixed] if layout_fixed is not None else \
+        list(layouts or conv_layout_space())
+    pes = cfg.nest.aw * cfg.nest.ah
+    dfs = list(dataflows) if dataflows is not None else \
+        list(enumerate_dataflows(wl, pes))
+    best: Optional[SearchResult] = None
+    for lay in layouts:
+        for df in dfs:
+            m = evaluate(wl, df, lay, cfg)
+            key = m.edp if objective == "edp" else m.cycles
+            if best is None or key < (best.metrics.edp if objective == "edp"
+                                      else best.metrics.cycles):
+                best = SearchResult(wl, df, lay, m)
+    assert best is not None
+    return best
+
+
+def network_eval(layers: Sequence[ConvWorkload], cfg: EvalConfig,
+                 per_layer_layout: bool, **kw) -> List[SearchResult]:
+    """Evaluate a whole network; with ``per_layer_layout=False`` a single layout
+    (the best single choice across layers) is used everywhere — the fixed-layout
+    baseline; with True, each layer co-switches (FEATHER)."""
+    if per_layer_layout:
+        return [cosearch_layer(l, cfg, **kw) for l in layers]
+    layouts = list(kw.pop("layouts", conv_layout_space()))
+    best_total, best_results = None, None
+    for lay in layouts:
+        res = [cosearch_layer(l, cfg, layout_fixed=lay, **kw) for l in layers]
+        total = sum(r.metrics.edp for r in res)
+        if best_total is None or total < best_total:
+            best_total, best_results = total, res
+    assert best_results is not None
+    return best_results

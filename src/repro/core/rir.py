@@ -1,0 +1,54 @@
+"""RIR — Reorder-In-Reduction semantic specification (paper §II-E2, §IV).
+
+The function BIRRD computes each cycle: AW partial sums arrive from one NEST
+row; arbitrary contiguous-or-not *reduction groups* are summed and each group's
+result lands on an *arbitrary output port* (= StaB bank), so the oAct tensor
+materializes directly in the next layer's concordant layout.
+
+This module is the oracle the Pallas kernels and the BIRRD switch model are
+both validated against.  All ops are pure jnp and differentiable.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def rir_reduce_reorder(values: jax.Array, group_ids: jax.Array,
+                       out_ports: jax.Array, num_outputs: int) -> jax.Array:
+    """sum values per group, scatter each group's sum to its output port.
+
+    values:     (n, ...)  — one row of NEST partial sums (leading axis = wires)
+    group_ids:  (n,) int32 — reduction group per wire, -1 = bubble
+    out_ports:  (g,) int32 — target port per group (distinct)
+    returns     (num_outputs, ...) with zeros on unclaimed ports
+    """
+    n = values.shape[0]
+    ngroups = out_ports.shape[0]
+    gid = jnp.where(group_ids < 0, ngroups, group_ids)  # bubbles -> overflow slot
+    sums = jax.ops.segment_sum(values, gid, num_segments=ngroups + 1)[:ngroups]
+    out_shape = (num_outputs,) + values.shape[1:]
+    out = jnp.zeros(out_shape, values.dtype)
+    return out.at[out_ports].set(sums)
+
+
+def rir_layout_write(oacts: jax.Array, perm: jax.Array) -> jax.Array:
+    """Pure reorder (no reduction): BIRRD as a permutation network (Fig. 10-B).
+
+    perm[i] = output port receiving input wire i.
+    """
+    out = jnp.zeros_like(oacts)
+    return out.at[perm].set(oacts)
+
+
+def make_group_ids(group_sizes: Sequence[int], n: int) -> jnp.ndarray:
+    """Contiguous reduction groups: sizes -> per-wire group ids (-1 padding)."""
+    ids = []
+    for g, s in enumerate(group_sizes):
+        ids.extend([g] * s)
+    ids.extend([-1] * (n - len(ids)))
+    if len(ids) != n:
+        raise ValueError("group sizes exceed wire count")
+    return jnp.asarray(ids, jnp.int32)

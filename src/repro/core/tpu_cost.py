@@ -1,0 +1,112 @@
+"""TPU roofline-term cost model — the Layoutloop idea retargeted at TPU v5e.
+
+Used by the launcher to pick per-layer sharding plans and by the roofline
+benchmark to post-process dry-run artifacts.  Hardware constants per the
+assignment: 197 TFLOP/s bf16 / chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (per direction)
+
+_COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\b")
+_SHAPE_RE = re.compile(r"\b(s4|s8|s16|s32|s64|u4|u8|u16|u32|u64|f8e4m3fn|f8e5m2|"
+                       r"bf16|f16|f32|f64|pred)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+                "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8}
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self) -> float:
+        """Fraction of the step spent at the dominant roof if perfectly
+        overlapped: bound / sum — 1.0 means the other two terms are free."""
+        total = self.compute_s + self.memory_s + self.collective_s
+        return self.bound_s / total if total else 0.0
+
+
+def terms_from_counts(hlo_flops: float, hlo_bytes: float,
+                      collective_bytes: float, chips: int,
+                      ici_links: int = 4) -> RooflineTerms:
+    """The three roofline terms in seconds (per the assignment's formulas).
+
+    ``hlo_flops``/``hlo_bytes`` are whole-program counts; XLA's cost analysis
+    reports per-partition HLO, so ``chips`` normalizes whichever convention the
+    caller used — we expect PER-CHIP counts and divide only by per-chip peaks.
+    """
+    return RooflineTerms(
+        compute_s=hlo_flops / PEAK_FLOPS,
+        memory_s=hlo_bytes / HBM_BW,
+        collective_s=collective_bytes / (ici_links * ICI_BW),
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes,
+        collective_bytes=collective_bytes, chips=chips)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    """Sum result-shape bytes of every collective op in an HLO dump.
+
+    Parses lines like::
+
+        %ag = bf16[8,1024,4096]{...} all-gather(%x), ...
+
+    Counts the (already partitioned) operand/result sizes, attributing bytes to
+    each collective kind.  ``-start`` ops are counted, ``-done`` skipped to
+    avoid double counting.
+    """
+    per_kind: Dict[str, float] = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        if "-done" in m.group(0):
+            continue
+        # result shape(s) appear on the lhs before the op name
+        lhs = line.split("=", 1)
+        search_space = lhs[1] if len(lhs) == 2 else line
+        op_pos = search_space.find(m.group(1))
+        shapes = _SHAPE_RE.findall(search_space[:op_pos] if op_pos > 0
+                                   else search_space)
+        nbytes = 0.0
+        for dt, dims in shapes:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        kind = m.group(1)
+        per_kind[kind] = per_kind.get(kind, 0.0) + nbytes
+        total += nbytes
+    return total, per_kind
+
+
+def model_flops(n_params_active: float, tokens: float) -> float:
+    """MODEL_FLOPS = 6 * N * D (dense) or 6 * N_active * D (MoE)."""
+    return 6.0 * n_params_active * tokens

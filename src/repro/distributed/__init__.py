@@ -1,0 +1,9 @@
+from .sharding import (LayerPlan, batch_sharding, cache_shardings,
+                       hidden_sharding, param_shardings, plans_for)
+from .stepfn import (jit_prefill, jit_serve_step, jit_train_step,
+                     make_serve_step, make_train_step)
+
+__all__ = ["LayerPlan", "batch_sharding", "cache_shardings",
+           "hidden_sharding", "param_shardings", "plans_for",
+           "jit_prefill", "jit_serve_step", "jit_train_step",
+           "make_serve_step", "make_train_step"]

@@ -1,0 +1,137 @@
+"""Distributed train / serve step builders (pjit + per-layer layout plans)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.optim import adamw_init, adamw_update, wsd_schedule
+from .sharding import (batch_sharding, cache_shardings, hidden_sharding,
+                       opt_shardings, param_shardings, _axes)
+
+Pytree = Any
+
+
+def make_train_step(model, mesh: Mesh, *, layout_mode: str = "coswitch",
+                    accum: int = 1, lr: float = 3e-4,
+                    schedule: Optional[Callable] = None) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``accum`` > 1 runs gradient-accumulation microbatches via lax.scan —
+    which also overlaps the DP gradient all-reduce of microbatch i with the
+    backward of microbatch i+1 once XLA schedules the psum early.
+    """
+    model.mesh = mesh   # enables shard_map EP-MoE inside the layer stack
+    hook = hidden_sharding(mesh, layout_mode)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, hook=hook)
+
+    def step(params, opt_state, batch):
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (jax.tree.map(jnp.add, acc, g),), l
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                batch)
+            (gsum,), losses = jax.lax.scan(micro, (zeros,), mbs)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = jnp.mean(losses)
+        step_lr = schedule(opt_state.step) if schedule is not None else lr
+        params, opt_state = adamw_update(grads, opt_state, params, step_lr)
+        return params, opt_state, {"loss": loss, "lr": step_lr}
+
+    return step
+
+
+def _wants_fsdp(model) -> bool:
+    import numpy as np
+    import jax
+    total = sum(float(np.prod(s.shape)) for s in
+                jax.tree.leaves(model.param_specs()))
+    return total > 8e9
+
+
+def shardings_for_train(model, mesh: Mesh):
+    pspecs = model.param_specs()
+    p_sh = param_shardings(mesh, pspecs, fsdp=_wants_fsdp(model))
+    z1 = opt_shardings(mesh, p_sh, pspecs)  # ZeRO-1 fp32 state
+    return p_sh, z1
+
+
+def jit_train_step(model, mesh: Mesh, batch_specs: Pytree, **kw):
+    """Fully-specified pjit of the train step for lowering/compiling."""
+    from repro.optim.adamw import AdamWState
+    step = make_train_step(model, mesh, **kw)
+    p_sh, z1 = shardings_for_train(model, mesh)
+    opt_sh = AdamWState(step=NamedSharding(mesh, P()), mu=z1, nu=z1,
+                        master=z1)
+    data_sh = jax.tree.map(lambda s: batch_sharding(mesh), batch_specs)
+    metrics_sh = {"loss": NamedSharding(mesh, P()),
+                  "lr": NamedSharding(mesh, P())}
+    return jax.jit(
+        step,
+        in_shardings=(p_sh, opt_sh, data_sh),
+        out_shardings=(p_sh, opt_sh, metrics_sh),
+        donate_argnums=(0, 1),
+    )
+
+
+def make_serve_step(model, mesh: Mesh) -> Callable:
+    def step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+    return step
+
+
+def jit_serve_step(model, mesh: Mesh, batch: int, max_seq: int):
+    from .sharding import _guard
+    model.mesh = mesh
+    p_sh = param_shardings(mesh, model.param_specs(), fsdp=_wants_fsdp(model))
+    c_specs = model.cache_specs(batch, max_seq)
+    c_sh = cache_shardings(mesh, c_specs)
+    data, _ = _axes(mesh)
+    vocab = model.cfg.vocab
+    tok_sh = _guard(mesh, (batch,), P(data))
+    logits_sh = _guard(mesh, (batch, vocab), P(data, "model"))
+    return jax.jit(
+        make_serve_step(model, mesh),
+        in_shardings=(p_sh, c_sh, tok_sh),
+        out_shardings=(c_sh, logits_sh),
+        donate_argnums=(1,),
+    )
+
+
+def jit_prefill(model, mesh: Mesh, batch: int, seq: int, max_seq: int,
+                frames: bool = False):
+    from .sharding import _guard
+    model.mesh = mesh
+    p_sh = param_shardings(mesh, model.param_specs(), fsdp=_wants_fsdp(model))
+    c_sh = cache_shardings(mesh, model.cache_specs(batch, max_seq))
+    data, _ = _axes(mesh)
+    vocab = model.cfg.vocab
+    tok_sh = _guard(mesh, (batch, seq), P(data, None))
+    logits_sh = _guard(mesh, (batch, vocab), P(data, "model"))
+
+    if frames:
+        def fn(params, tokens, fr):
+            return model.prefill(params, tokens, max_seq, frames=fr)
+        in_sh = (p_sh, tok_sh, _guard(
+            mesh, (batch, model.cfg.enc_frames, model.cfg.d_model),
+            P(data, None, None)))
+    else:
+        def fn(params, tokens):
+            return model.prefill(params, tokens, max_seq)
+        in_sh = (p_sh, tok_sh)
+    return jax.jit(fn, in_shardings=in_sh, out_shardings=(c_sh, logits_sh),
+                   static_argnums=())

@@ -1,0 +1,113 @@
+"""Chunked gated-linear-attention scan — the SSM hot spot (mamba2 / rwkv6).
+
+Recurrence  h_t = exp(logw_t) (.) h_{t-1} + k_t^T v_t ;  y_t = q_t h_t
+with per-(step, key-dim) log decay logw <= 0.
+
+TPU adaptation: the sequential scan is reblocked into chunks of L steps so
+the MXU does three (L x dk)x(dk x ...) GEMMs per chunk (intra-chunk causal
+attention, inter-chunk state read, state update) instead of T rank-1
+updates — the chunk axis of the grid is sequential and carries the (dk, dv)
+state in VMEM scratch, which is NEST's local temporal reduction in SSM form.
+Exponents are clamped at +/-30 for fp32 safety (standard GLA practice).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_CLAMP = 30.0
+
+
+def _kernel(q_ref, k_ref, v_ref, w_ref, o_ref, h_ref, *, chunks: int,
+            sub: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    q = q_ref[0].astype(jnp.float32)       # (L, dk)
+    k = k_ref[0].astype(jnp.float32)       # (L, dk)
+    v = v_ref[0].astype(jnp.float32)       # (L, dv)
+    logw = w_ref[0].astype(jnp.float32)    # (L, dk)
+    L = q.shape[0]
+
+    cum = jnp.cumsum(logw, axis=0)                        # inclusive prefix
+    cum_total = cum[-1:, :]                               # (1, dk)
+    q_in = q * jnp.exp(cum)                               # exponents <= 0
+    k_in = k * jnp.exp(cum_total - cum)                   # exponents <= 0
+
+    # inter-chunk: read the carried state
+    y = jnp.dot(q_in, h_ref[...], preferred_element_type=jnp.float32)
+
+    # intra-chunk: exact sub-chunk factorization — for row block j the base
+    # b_j (decay prefix at the block start) lies between s and t, so both
+    # exp(cum_t - b_j) and exp(b_j - cum_s) stay <= 1 (no overflow, no clamp)
+    col_pos = jax.lax.broadcasted_iota(jnp.int32, (1, L), 1)
+    blocks = []
+    for j in range(L // sub):
+        lo = j * sub
+        b = cum[lo]                                       # (dk,)
+        q_j = q[lo:lo + sub] * jnp.exp(cum[lo:lo + sub] - b[None, :])
+        k_pre = k * jnp.exp(jnp.minimum(b[None, :] - cum, 0.0))
+        pre = jnp.dot(q_j, k_pre.T, preferred_element_type=jnp.float32)
+        pre = jnp.where(col_pos < lo, pre, 0.0)           # strictly earlier
+        cd = cum[lo:lo + sub]
+        diff = cd[:, None, :] - cd[None, :, :]            # (sub, sub, dk)
+        blk = jnp.sum(q[lo:lo + sub][:, None, :] * k[lo:lo + sub][None, :, :]
+                      * jnp.exp(jnp.minimum(diff, 0.0)), axis=-1)
+        row_i = jax.lax.broadcasted_iota(jnp.int32, (sub, sub), 0)
+        col_i = jax.lax.broadcasted_iota(jnp.int32, (sub, sub), 1)
+        blk = jnp.where(row_i >= col_i, blk, 0.0)
+        in_blk = (col_pos >= lo) & (col_pos < lo + sub)
+        diag_full = jnp.where(
+            in_blk, jax.lax.dynamic_update_slice(
+                jnp.zeros((sub, L), jnp.float32), blk, (0, lo)), 0.0)
+        blocks.append(pre + diag_full)
+    scores = jnp.concatenate(blocks, axis=0)              # (L, L)
+    y = y + jnp.dot(scores, v, preferred_element_type=jnp.float32)
+    # state update
+    h_ref[...] = (jnp.exp(cum_total.T) * h_ref[...]
+                  + jnp.dot(k_in.T, v, preferred_element_type=jnp.float32))
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "sub", "interpret"))
+def linear_scan(q: jax.Array, k: jax.Array, v: jax.Array,
+                log_decay: jax.Array, *, chunk: int = 64, sub: int = 16,
+                interpret: bool = True) -> jax.Array:
+    """q/k: (B, H, T, dk); v: (B, H, T, dv); log_decay: (B, H, T, dk) <= 0."""
+    B, H, T, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    sub = min(sub, chunk)
+    while chunk % sub:
+        sub -= 1
+    chunks = T // chunk
+    qf = q.reshape(B * H, T, dk)
+    kf = k.reshape(B * H, T, dk)
+    vf = v.reshape(B * H, T, dv)
+    wf = log_decay.reshape(B * H, T, dk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunks=chunks, sub=sub),
+        grid=(B * H, chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda bh, c: (bh, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda bh, c: (bh, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, T, dv), v.dtype),
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf, wf)
+    return out.reshape(B, H, T, dv)

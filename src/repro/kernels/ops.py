@@ -1,0 +1,99 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On non-TPU backends (this container is CPU-only) the kernels run in
+``interpret=True`` mode, which executes the kernel bodies for correctness;
+on TPU the same BlockSpecs compile to Mosaic.  ``use_kernels(False)`` swaps
+in the pure-jnp references (used by the dry-run so lowering stays pure XLA).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+from . import ref
+from .birrd_reduce import birrd_apply, birrd_reduce as _birrd_reduce
+from .gqa_decode import gqa_decode as _gqa_decode
+from .linear_scan import linear_scan as _linear_scan
+from .rir_matmul import rir_matmul as _rir_matmul
+
+_KERNELS_ENABLED = True
+
+
+def use_kernels(enabled: bool) -> None:
+    global _KERNELS_ENABLED
+    _KERNELS_ENABLED = enabled
+
+
+def kernels_enabled() -> bool:
+    return _KERNELS_ENABLED
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def rir_matmul(a: jax.Array, b: jax.Array,
+               out_block_perm: Optional[Sequence[int]] = None, *,
+               block_m: int = 128, block_n: int = 128, block_k: int = 128
+               ) -> jax.Array:
+    if not _KERNELS_ENABLED:
+        return ref.rir_matmul(a, b, out_block_perm or
+                              tuple(range(b.shape[1] // block_n)), block_n)
+    perm = tuple(out_block_perm) if out_block_perm is not None else None
+    return _rir_matmul(a, b, perm, block_m=block_m, block_n=block_n,
+                       block_k=block_k, interpret=_interpret())
+
+
+def birrd_reduce(x: jax.Array, group_ids: Sequence[int],
+                 out_ports: Sequence[int], *, block_d: int = 128) -> jax.Array:
+    import jax.numpy as jnp
+    if not _KERNELS_ENABLED:
+        gi = jnp.asarray(list(group_ids), jnp.int32)
+        op = jnp.asarray(list(out_ports), jnp.int32)
+        return ref.birrd_reduce(x, gi, op, x.shape[0])
+    return _birrd_reduce(x, tuple(group_ids), tuple(out_ports),
+                         block_d=block_d, interpret=_interpret())
+
+
+def gqa_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+               lengths: jax.Array, *, block_s: int = 512) -> jax.Array:
+    S = k.shape[1]
+    if not _KERNELS_ENABLED or S % min(block_s, S) != 0:
+        return ref.gqa_decode(q, k, v, lengths)
+    return _gqa_decode(q, k, v, lengths, block_s=block_s,
+                       interpret=_interpret())
+
+
+@jax.custom_vjp
+def _linear_scan_ad(q, k, v, log_decay):
+    return _linear_scan(q, k, v, log_decay, interpret=_interpret())
+
+
+def _ls_fwd(q, k, v, log_decay):
+    return _linear_scan_ad(q, k, v, log_decay), (q, k, v, log_decay)
+
+
+def _ls_bwd(res, g):
+    # backward through the pure-XLA chunked path (same math; a dedicated
+    # backward kernel is future work — on TPU this recomputes fwd in XLA)
+    _, vjp = jax.vjp(ref.linear_scan_chunked, *res)
+    return vjp(g)
+
+
+_linear_scan_ad.defvjp(_ls_fwd, _ls_bwd)
+
+
+def linear_scan(q: jax.Array, k: jax.Array, v: jax.Array,
+                log_decay: jax.Array, *, chunk: int = 64) -> jax.Array:
+    if not _KERNELS_ENABLED:
+        # pure-XLA path: chunked (not per-step) so the dry-run lowers the
+        # same three-GEMM structure the Pallas kernel executes
+        import os
+        ck = int(os.environ.get('REPRO_SCAN_CHUNK', chunk))
+        return ref.linear_scan_chunked(q, k, v, log_decay, chunk=ck)
+    return _linear_scan_ad(q, k, v, log_decay)
+
+
+__all__ = ["rir_matmul", "birrd_reduce", "birrd_apply", "gqa_decode",
+           "linear_scan", "use_kernels", "kernels_enabled"]

@@ -1,0 +1,69 @@
+"""Batched serving driver: prefill a prompt batch, decode with KV caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3p2_3b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3p2_3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--model-axis", type=int, default=1)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import build_model
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    mesh = make_local_mesh(args.model_axis)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    max_seq = args.prompt_len + args.gen
+
+    B = args.batch
+    prompts = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab)
+
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    with mesh:
+        t0 = time.time()
+        if cfg.family in ("ssm", "hybrid"):
+            cache = model.init_cache(B, max_seq)
+            logits = None
+            for t in range(args.prompt_len):  # SSM prefill = fast scan-in
+                cache, logits = decode(params, cache, prompts[:, t])
+        else:
+            cache, logits = model.prefill(params, prompts, max_seq)
+        t_prefill = time.time() - t0
+        tokens = jnp.argmax(logits, axis=-1)
+        out = [tokens]
+        t0 = time.time()
+        for _ in range(args.gen - 1):
+            cache, logits = decode(params, cache, tokens)
+            tokens = jnp.argmax(logits, axis=-1)
+            out.append(tokens)
+        jax.block_until_ready(tokens)
+        t_decode = time.time() - t0
+    gen = np.stack([np.asarray(t) for t in out], axis=1)
+    print(f"[serve] arch={cfg.name} batch={B} prompt={args.prompt_len} "
+          f"gen={args.gen}")
+    print(f"[serve] prefill {t_prefill*1e3:.1f} ms; decode "
+          f"{t_decode*1e3/max(1, args.gen-1):.1f} ms/token")
+    print("[serve] sample tokens:", gen[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

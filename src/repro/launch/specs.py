@@ -1,0 +1,43 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig, ShapeCell, shape_by_name
+from repro.models import build_model
+
+
+def input_specs(arch: str, shape: str, smoke: bool = False) -> Dict[str, Any]:
+    """Stand-ins for one (arch x shape) cell.
+
+    train:   {"batch": {"tokens", ["frames"]}}
+    prefill: {"tokens", ["frames"]}
+    decode:  {"cache": cache specs, "tokens": (B,)}
+    """
+    cfg = get_config(arch, smoke)
+    cell = shape_by_name(shape)
+    model = build_model(cfg)
+    B, T = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+
+    if cell.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, T + 1), i32)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+        return {"batch": batch}
+    if cell.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, T), i32)}
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+        return out
+    # decode: one new token with a KV cache of seq_len
+    return {
+        "cache": model.cache_specs(B, T),
+        "tokens": jax.ShapeDtypeStruct((B,), i32),
+    }

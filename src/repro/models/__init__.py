@@ -1,0 +1,18 @@
+"""Model zoo factory."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+from .encdec import EncDecModel
+from .hybrid import HybridModel
+from .lm import LMModel
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        return EncDecModel(cfg)
+    if cfg.family == "hybrid":
+        return HybridModel(cfg)
+    return LMModel(cfg)
+
+
+__all__ = ["build_model", "LMModel", "HybridModel", "EncDecModel"]

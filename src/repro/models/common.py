@@ -1,0 +1,138 @@
+"""Shared model components: norms, RoPE, activations, chunked attention."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+def apply_norm(kind: str, x: jax.Array, params) -> jax.Array:
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["w"])
+    return layernorm(x, params["w"], params["b"])
+
+
+def norm_spec(kind: str, d: int, dtype) -> dict:
+    if kind == "rmsnorm":
+        return {"w": jax.ShapeDtypeStruct((d,), dtype)}
+    return {"w": jax.ShapeDtypeStruct((d,), dtype),
+            "b": jax.ShapeDtypeStruct((d,), dtype)}
+
+
+def activation(kind: str, x: jax.Array, gate: Optional[jax.Array] = None
+               ) -> jax.Array:
+    if kind == "swiglu":
+        assert gate is not None
+        return jax.nn.silu(gate) * x
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    return jax.nn.gelu(x)
+
+
+# ------------------------------------------------------------------------ RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, dh); positions: broadcastable to (..., T)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,T,1,dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------- chunked causal attention
+@functools.partial(jax.jit, static_argnames=("chunk", "causal"))
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      chunk: int = 1024, causal: bool = True) -> jax.Array:
+    """Memory-efficient (flash-style) attention in pure jnp.
+
+    q: (B, Tq, H, dh); k/v: (B, Tk, Hkv, dh) with H = G * Hkv.
+    lax.scan over KV chunks with online softmax — peak memory O(Tq * chunk)
+    instead of O(Tq * Tk).
+    """
+    B, Tq, H, dh = q.shape
+    _, Tk, Hkv, _ = k.shape
+    G = H // Hkv
+    scale = 1.0 / (dh ** 0.5)
+    chunk = min(chunk, Tk)
+    while Tk % chunk:   # largest chunk <= requested that tiles Tk
+        chunk -= 1
+    n_chunks = Tk // chunk
+
+    qf = q.astype(jnp.float32).reshape(B, Tq, Hkv, G, dh)
+    kf = k.astype(jnp.float32).reshape(B, n_chunks, chunk, Hkv, dh)
+    vf = v.astype(jnp.float32).reshape(B, n_chunks, chunk, Hkv, dh)
+    q_pos = (Tk - Tq) + jnp.arange(Tq)  # align query to suffix positions
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kc, vc, ci = inp
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kc) * scale
+        if causal:
+            k_pos = ci * chunk + jnp.arange(chunk)
+            mask = q_pos[:, None] >= k_pos[None, :]     # (Tq, chunk)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vc)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Tq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Tq, dh), jnp.float32)
+    ks = jnp.moveaxis(kf, 1, 0)
+    vs = jnp.moveaxis(vf, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (ks, vs, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]        # (B, Hkv, G, Tq, dh)
+    return jnp.moveaxis(out, 3, 1).reshape(B, Tq, H, dh).astype(q.dtype)
+
+
+def dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (..., d_in) @ w: (d_in, d_out), accumulating in fp32."""
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def shard_heads(x: jax.Array, mesh) -> jax.Array:
+    """Constrain a (B, H, T, d) tensor to batch x head sharding — GSPMD will
+    not shard a broadcast head dim on its own, which replicates SSM scans."""
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    data = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dsize = 1
+    for a in data:
+        dsize *= mesh.shape[a]
+    if x.shape[0] % dsize or x.shape[1] % mesh.shape["model"]:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(data, "model", None, None)))

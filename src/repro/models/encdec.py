@@ -1,0 +1,161 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a STUB:
+``input_specs`` provides precomputed frame embeddings per the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .blocks import (attn_decode, attn_prefill, attn_specs, attn_train,
+                     cross_attn_train, mlp_apply, mlp_specs)
+from .common import apply_norm, chunked_attention, dense, norm_spec
+from .lm import LMModel, _stack_specs, chunked_ce_loss, init_from_specs
+
+
+@dataclasses.dataclass
+class EncDecModel(LMModel):
+    """cfg.family == "encdec" (whisper-small)."""
+
+    def param_specs(self) -> Dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        enc_layer = {"attn": attn_specs(cfg), "ffn": mlp_specs(cfg)}
+        dec_layer = {"self": attn_specs(cfg), "cross": attn_specs(cfg),
+                     "ffn": mlp_specs(cfg)}
+        return {
+            "embed": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), dt),
+            "pos_embed": jax.ShapeDtypeStruct((32768, cfg.d_model), dt),
+            "enc_pos": jax.ShapeDtypeStruct((cfg.enc_frames, cfg.d_model), dt),
+            "enc_layers": _stack_specs(enc_layer, cfg.enc_layers),
+            "enc_norm": norm_spec(cfg.norm, cfg.d_model, dt),
+            "dec_layers": _stack_specs(dec_layer, cfg.n_layers),
+            "final_norm": norm_spec(cfg.norm, cfg.d_model, dt),
+        }
+
+    def init(self, key: jax.Array) -> Dict:
+        return init_from_specs(self.param_specs(), key)
+
+    def encode(self, params: Dict, frames: jax.Array) -> jax.Array:
+        """frames: (B, Tenc, D) stub embeddings -> encoder memory."""
+        cfg = self.cfg
+        x = frames + params["enc_pos"][None, :frames.shape[1]]
+
+        def body(x, layer):
+            x = x + attn_train(cfg, layer["attn"], x, causal=False,
+                               use_rope=False)
+            x = x + mlp_apply(cfg, layer["ffn"], x)
+            return x, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_layers"])
+        return apply_norm(cfg.norm, x, params["enc_norm"])
+
+    def _decoder_hidden(self, params: Dict, tokens: jax.Array,
+                        memory: jax.Array, remat: bool = True) -> jax.Array:
+        cfg = self.cfg
+        T = tokens.shape[1]
+        x = jnp.take(params["embed"], tokens, axis=0) \
+            + params["pos_embed"][None, :T]
+
+        def body(x, layer):
+            x = x + attn_train(cfg, layer["self"], x, use_rope=False)
+            x = x + cross_attn_train(cfg, layer["cross"], x, memory)
+            x = x + mlp_apply(cfg, layer["ffn"], x)
+            return x, None
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        return apply_norm(cfg.norm, x, params["final_norm"])
+
+    def logits(self, params: Dict, hidden: jax.Array) -> jax.Array:
+        return dense(hidden, params["embed"].T)  # whisper ties output head
+
+    def loss(self, params: Dict, batch: Dict, hook=None) -> jax.Array:
+        """batch: {"frames": (B, Tenc, D), "tokens": (B, T+1)}."""
+        tokens = batch["tokens"]
+        memory = self.encode(params, batch["frames"])
+        hidden = self._decoder_hidden(params, tokens[:, :-1], memory)
+        return chunked_ce_loss(self, params, hidden, tokens[:, 1:])
+
+    # ---------------------------------------------------------------- serving
+    def cache_specs(self, batch: int, max_seq: int) -> Dict:
+        cfg = self.cfg
+        dh, dt = cfg.head_dim, jnp.dtype(cfg.dtype)
+        kv = lambda s: jax.ShapeDtypeStruct((batch, s, cfg.n_kv_heads, dh), dt)
+        return {
+            "layers": _stack_specs({"k": kv(max_seq), "v": kv(max_seq),
+                                    "ck": kv(cfg.enc_frames),
+                                    "cv": kv(cfg.enc_frames)}, cfg.n_layers),
+            "length": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        }
+
+    def prefill(self, params: Dict, tokens: jax.Array, max_seq: int,
+                frames: Optional[jax.Array] = None) -> Tuple[Dict, jax.Array]:
+        cfg = self.cfg
+        B, T = tokens.shape
+        if frames is None:
+            frames = jnp.zeros((B, cfg.enc_frames, cfg.d_model),
+                               jnp.dtype(cfg.dtype))
+        memory = self.encode(params, frames)
+        x = jnp.take(params["embed"], tokens, axis=0) \
+            + params["pos_embed"][None, :T]
+        cache = self.init_cache(B, max_seq)
+
+        def body(x, layer):
+            delta, (k, v) = attn_prefill(cfg, layer["self"], x,
+                                         use_rope=False)
+            x = x + delta
+            x = x + cross_attn_train(cfg, layer["cross"], x, memory)
+            x = x + mlp_apply(cfg, layer["ffn"], x)
+            # cross-attention K/V precomputed once from memory
+            h = apply_norm(cfg.norm, memory, layer["cross"]["norm"])
+            ckv = dense(h, layer["cross"]["wkv"]).reshape(
+                B, -1, 2 * cfg.n_kv_heads, cfg.head_dim)
+            return x, (k, v, ckv[..., :cfg.n_kv_heads, :],
+                       ckv[..., cfg.n_kv_heads:, :])
+
+        x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["dec_layers"])
+        S = max_seq
+        pad = ((0, 0), (0, 0), (0, S - T), (0, 0), (0, 0))
+        cache["layers"]["k"] = jnp.pad(ks, pad)
+        cache["layers"]["v"] = jnp.pad(vs, pad)
+        cache["layers"]["ck"] = cks
+        cache["layers"]["cv"] = cvs
+        x = apply_norm(cfg.norm, x, params["final_norm"])
+        cache["length"] = jnp.full((B,), T, jnp.int32)
+        return cache, self.logits(params, x[:, -1])
+
+    def decode_step(self, params: Dict, cache: Dict, tokens: jax.Array
+                    ) -> Tuple[Dict, jax.Array]:
+        cfg = self.cfg
+        B = tokens.shape[0]
+        length = cache["length"]
+        pos = jnp.clip(length, 0, params["pos_embed"].shape[0] - 1)
+        x = jnp.take(params["embed"], tokens, axis=0) \
+            + jnp.take(params["pos_embed"], pos, axis=0)
+
+        def body(x, scanned):
+            layer, lc = scanned
+            delta, k, v = attn_decode(cfg, layer["self"], x, lc["k"], lc["v"],
+                                      length, use_rope=False)
+            x = x + delta
+            # cross attention over precomputed encoder K/V
+            from repro.kernels import ops
+            h = apply_norm(cfg.norm, x, layer["cross"]["norm"])
+            q = dense(h, layer["cross"]["wq"]).reshape(
+                B, cfg.n_heads, cfg.head_dim)
+            enc_len = jnp.full((B,), lc["ck"].shape[1], jnp.int32)
+            o = ops.gqa_decode(q, lc["ck"], lc["cv"], enc_len)
+            x = x + dense(o.reshape(B, -1), layer["cross"]["wo"])
+            x = x + mlp_apply(cfg, layer["ffn"], x[:, None])[:, 0]
+            return x, {"k": k, "v": v, "ck": lc["ck"], "cv": lc["cv"]}
+
+        x, new_caches = jax.lax.scan(body, x,
+                                     (params["dec_layers"], cache["layers"]))
+        x = apply_norm(cfg.norm, x, params["final_norm"])
+        return ({"layers": new_caches, "length": length + 1},
+                self.logits(params, x))

@@ -1,0 +1,231 @@
+"""SSM mixers: Mamba2 (SSD) and RWKV6 (Finch), train + decode paths.
+
+Both reduce to the gated-linear-attention recurrence executed by
+``kernels.linear_scan`` (chunked, MXU-friendly) in training/prefill and by the
+exact one-step recurrence in decode.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from .common import apply_norm, dense, norm_spec, shard_heads
+
+_LORA_RANK = 64
+
+
+def _dt(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    di = cfg.d_inner or 2 * cfg.d_model
+    state = cfg.ssm_state or 64
+    heads = cfg.ssm_heads or max(1, di // 64)
+    headdim = di // heads
+    return di, state, heads, headdim
+
+
+# ---------------------------------------------------------------------- mamba2
+def mamba2_specs(cfg: ArchConfig) -> Dict:
+    D = cfg.d_model
+    di, state, heads, _ = _dims(cfg)
+    dt = _dt(cfg)
+    conv_ch = di + 2 * state
+    return {
+        "norm": norm_spec(cfg.norm, D, dt),
+        "in_proj": jax.ShapeDtypeStruct((D, 2 * di + 2 * state + heads), dt),
+        "conv_w": jax.ShapeDtypeStruct((cfg.conv_width, conv_ch), dt),
+        "conv_b": jax.ShapeDtypeStruct((conv_ch,), dt),
+        "A_log": jax.ShapeDtypeStruct((heads,), jnp.float32),
+        "D_skip": jax.ShapeDtypeStruct((heads,), jnp.float32),
+        "dt_bias": jax.ShapeDtypeStruct((heads,), jnp.float32),
+        "out_norm": norm_spec("rmsnorm", di, dt),
+        "out_proj": jax.ShapeDtypeStruct((di, D), dt),
+    }
+
+
+def _mamba2_project(cfg, p, x):
+    di, state, heads, headdim = _dims(cfg)
+    h = apply_norm(cfg.norm, x, p["norm"])
+    zxbcdt = dense(h, p["in_proj"])
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * state]
+    dt_raw = zxbcdt[..., -heads:]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time.  xbc: (B, T, C); w: (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def mamba2_train(cfg: ArchConfig, p: Dict, x: jax.Array,
+                 mesh=None) -> jax.Array:
+    """x: (B, T, D) -> residual delta via chunked SSD scan."""
+    B, T, D = x.shape
+    di, state, heads, headdim = _dims(cfg)
+    z, xbc, dt_raw = _mamba2_project(cfg, p, x)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :di].reshape(B, T, heads, headdim)
+    Bmat = xbc[..., di:di + state]                      # (B, T, state)
+    Cmat = xbc[..., di + state:]                        # (B, T, state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])                # (B, T, heads)
+    A = -jnp.exp(p["A_log"])                            # (heads,) negative
+    log_decay = (dt * A).transpose(0, 2, 1)[..., None]  # (B, heads, T, 1)
+    log_decay = jnp.broadcast_to(log_decay, (B, heads, T, state))
+
+    q = jnp.broadcast_to(Cmat[:, None], (B, heads, T, state))
+    k = jnp.broadcast_to(Bmat[:, None], (B, heads, T, state)) \
+        * dt.transpose(0, 2, 1)[..., None].astype(x.dtype)
+    v = xs.transpose(0, 2, 1, 3)                        # (B, heads, T, headdim)
+    q = shard_heads(q.astype(x.dtype), mesh)
+    k = shard_heads(k.astype(x.dtype), mesh)
+    v = shard_heads(v, mesh)
+    log_decay = shard_heads(log_decay, mesh)
+    y = ops.linear_scan(q, k, v, log_decay)
+    y = y + v * p["D_skip"][None, :, None, None].astype(x.dtype)
+    y = y.transpose(0, 2, 1, 3).reshape(B, T, di)
+    y = apply_norm("rmsnorm", y * jax.nn.silu(z), p["out_norm"])
+    return dense(y, p["out_proj"])
+
+
+def mamba2_cache_specs(cfg: ArchConfig, batch: int) -> Dict:
+    di, state, heads, headdim = _dims(cfg)
+    dt = _dt(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1,
+                                      di + 2 * state), dt),
+        "ssm": jax.ShapeDtypeStruct((batch, heads, state, headdim),
+                                    jnp.float32),
+    }
+
+
+def mamba2_decode(cfg: ArchConfig, p: Dict, x: jax.Array, cache: Dict
+                  ) -> Tuple[jax.Array, Dict]:
+    """One step.  x: (B, D); cache: {conv (B, W-1, C), ssm (B, H, state, hd)}."""
+    B, D = x.shape
+    di, state, heads, headdim = _dims(cfg)
+    z, xbc, dt_raw = _mamba2_project(cfg, p, x[:, None, :])
+    z, xbc, dt_raw = z[:, 0], xbc[:, 0], dt_raw[:, 0]
+    window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    conv = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, p["conv_w"])
+                       + p["conv_b"])
+    xs = conv[..., :di].reshape(B, heads, headdim)
+    Bv = conv[..., di:di + state]
+    Cv = conv[..., di + state:]
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dtv * A)                            # (B, heads)
+    h = cache["ssm"] * decay[..., None, None]
+    h = h + (Bv[:, None, :, None] * dtv[..., None, None]
+             * xs[:, :, None, :].astype(jnp.float32))
+    y = jnp.einsum("bhsd,bs->bhd", h, Cv.astype(jnp.float32))
+    y = y.astype(x.dtype) + xs * p["D_skip"][None, :, None].astype(x.dtype)
+    y = y.reshape(B, di)
+    y = apply_norm("rmsnorm", y * jax.nn.silu(z), p["out_norm"])
+    new_cache = {"conv": window[:, 1:], "ssm": h}
+    return dense(y, p["out_proj"]), new_cache
+
+
+# ----------------------------------------------------------------------- rwkv6
+def rwkv6_specs(cfg: ArchConfig) -> Dict:
+    D = cfg.d_model
+    di, _, heads, headdim = _dims(cfg)
+    dt = _dt(cfg)
+    return {
+        "norm": norm_spec(cfg.norm, D, dt),
+        "mu": jax.ShapeDtypeStruct((5, D), dt),          # r,k,v,w,g token-shift
+        "wr": jax.ShapeDtypeStruct((D, di), dt),
+        "wk": jax.ShapeDtypeStruct((D, di), dt),
+        "wv": jax.ShapeDtypeStruct((D, di), dt),
+        "wg": jax.ShapeDtypeStruct((D, di), dt),
+        "w0": jax.ShapeDtypeStruct((di,), jnp.float32),
+        "w1": jax.ShapeDtypeStruct((D, _LORA_RANK), dt),
+        "w2": jax.ShapeDtypeStruct((_LORA_RANK, di), dt),
+        "u": jax.ShapeDtypeStruct((di,), jnp.float32),   # current-token bonus
+        "ln_x": norm_spec("rmsnorm", di, dt),            # per-head group norm
+        "wo": jax.ShapeDtypeStruct((di, D), dt),
+    }
+
+
+def _rwkv6_project(cfg, p, x, x_prev):
+    """Token-shift mix then project.  x, x_prev: (B, T, D)."""
+    mixed = [x + (x_prev - x) * p["mu"][i] for i in range(5)]
+    r = dense(mixed[0], p["wr"])
+    k = dense(mixed[1], p["wk"])
+    v = dense(mixed[2], p["wv"])
+    logw = -jnp.exp(p["w0"] + (dense(jnp.tanh(dense(mixed[3], p["w1"])),
+                                     p["w2"])).astype(jnp.float32))
+    g = jax.nn.silu(dense(mixed[4], p["wg"]))
+    return r, k, v, logw, g
+
+
+def rwkv6_train(cfg: ArchConfig, p: Dict, x: jax.Array,
+                mesh=None) -> jax.Array:
+    B, T, D = x.shape
+    di, _, heads, headdim = _dims(cfg)
+    h = apply_norm(cfg.norm, x, p["norm"])
+    h_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, logw, g = _rwkv6_project(cfg, p, h, h_prev)
+
+    def split(t):
+        return t.reshape(B, T, heads, headdim).transpose(0, 2, 1, 3)
+
+    rh, kh, vh, wh = split(r), split(k), split(v), split(logw)
+    # exclusive-decay trick: shift (k, v, w) one step so the scan yields
+    # y_t = r_t . h_{t-1}; the current-token bonus u is added directly.
+    ksh = jnp.pad(kh, ((0, 0), (0, 0), (1, 0), (0, 0)))[:, :, :-1]
+    vsh = jnp.pad(vh, ((0, 0), (0, 0), (1, 0), (0, 0)))[:, :, :-1]
+    wsh = jnp.pad(wh, ((0, 0), (0, 0), (1, 0), (0, 0)))[:, :, :-1]
+    rh = shard_heads(rh, mesh)
+    ksh = shard_heads(ksh.astype(x.dtype), mesh)
+    vsh = shard_heads(vsh, mesh)
+    wsh = shard_heads(wsh, mesh)
+    y = ops.linear_scan(rh, ksh, vsh, wsh)
+    u = p["u"].reshape(heads, headdim)
+    bonus = jnp.sum(rh * u[None, :, None, :].astype(x.dtype) * kh,
+                    axis=-1, keepdims=True) * vh
+    y = (y + bonus).transpose(0, 2, 1, 3).reshape(B, T, di)
+    y = apply_norm("rmsnorm", y, p["ln_x"]) * g
+    return dense(y, p["wo"])
+
+
+def rwkv6_cache_specs(cfg: ArchConfig, batch: int) -> Dict:
+    di, _, heads, headdim = _dims(cfg)
+    return {
+        "x_prev": jax.ShapeDtypeStruct((batch, cfg.d_model), _dt(cfg)),
+        "state": jax.ShapeDtypeStruct((batch, heads, headdim, headdim),
+                                      jnp.float32),
+    }
+
+
+def rwkv6_decode(cfg: ArchConfig, p: Dict, x: jax.Array, cache: Dict
+                 ) -> Tuple[jax.Array, Dict]:
+    B, D = x.shape
+    di, _, heads, headdim = _dims(cfg)
+    h = apply_norm(cfg.norm, x, p["norm"])
+    r, k, v, logw, g = _rwkv6_project(cfg, p, h[:, None], cache["x_prev"][:, None])
+    r, k, v, logw, g = r[:, 0], k[:, 0], v[:, 0], logw[:, 0], g[:, 0]
+
+    def split(t):
+        return t.reshape(B, heads, headdim)
+
+    rh, kh, vh = split(r), split(k), split(v)
+    wh = jnp.exp(split(logw))
+    u = p["u"].reshape(1, heads, headdim)
+    kv = kh[..., :, None].astype(jnp.float32) * vh[..., None, :].astype(jnp.float32)
+    wkv = cache["state"] + u[..., :, None] * kv
+    y = jnp.einsum("bhk,bhkd->bhd", rh.astype(jnp.float32), wkv)
+    new_state = cache["state"] * wh[..., :, None] + kv
+    y = y.astype(x.dtype).reshape(B, di)
+    y = apply_norm("rmsnorm", y, p["ln_x"]) * g
+    return dense(y, p["wo"]), {"x_prev": h, "state": new_state}

@@ -1,0 +1,68 @@
+"""AdamW with bf16 params + fp32 moments/master copy (mixed precision)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Pytree
+    nu: Pytree
+    master: Pytree   # fp32 master weights (params may be bf16)
+
+
+def adamw_init(params: Pytree) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(f32, params),
+        nu=jax.tree.map(f32, params),
+        # copy=True: master must never alias params (donation safety)
+        master=jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True),
+                            params),
+    )
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float
+                        ) -> Tuple[Pytree, jax.Array]:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def adamw_update(grads: Pytree, state: AdamWState, params: Pytree,
+                 lr: jax.Array, *, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 max_grad_norm: float = 1.0) -> Tuple[Pytree, AdamWState]:
+    grads, _ = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    b1c = 1 - b1 ** step.astype(jnp.float32)
+    b2c = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + eps) + weight_decay * w
+        return m, v, w - lr * upd
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    flat_w = jax.tree.leaves(state.master)
+    out = [upd(g, m, v, w) for g, m, v, w in
+           zip(flat_g, flat_m, flat_v, flat_w)]
+    mu = jax.tree.unflatten(tdef, [o[0] for o in out])
+    nu = jax.tree.unflatten(tdef, [o[1] for o in out])
+    master = jax.tree.unflatten(tdef, [o[2] for o in out])
+    new_params = jax.tree.map(
+        lambda w, p: w.astype(p.dtype), master, params)
+    return new_params, AdamWState(step, mu, nu, master)

@@ -1,0 +1,24 @@
+"""LR schedules: WSD (Warmup-Stable-Decay, MiniCPM) and cosine."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(step, *, peak_lr: float, warmup: int, stable: int,
+                 decay: int, final_frac: float = 0.1):
+    """MiniCPM's Warmup-Stable-Decay: linear warmup, flat, then exponential
+    anneal to ``final_frac * peak_lr`` over ``decay`` steps."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+    in_decay = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+    anneal = peak_lr * (final_frac ** in_decay)
+    return jnp.where(step < warmup + stable, warm, anneal)
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, peak_lr * cos)

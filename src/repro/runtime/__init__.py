@@ -1,0 +1,5 @@
+from .fault_tolerance import (ElasticPlan, HeartbeatRegistry, StragglerMonitor,
+                              TrainSupervisor, plan_elastic_mesh)
+
+__all__ = ["ElasticPlan", "HeartbeatRegistry", "StragglerMonitor",
+           "TrainSupervisor", "plan_elastic_mesh"]

@@ -1,0 +1,152 @@
+"""Fault tolerance: heartbeats, elastic re-meshing, straggler mitigation.
+
+Designed for 1000+ node fleets; the mechanisms are host-count agnostic and
+exercised in tests with simulated failures:
+
+* ``HeartbeatRegistry`` — liveness tracking with configurable timeout; the
+  supervisor polls it between steps (cheap: one monotonic read per host).
+* ``plan_elastic_mesh`` — given the surviving host set, choose the largest
+  (data, model) mesh that keeps the model axis intact (TP groups must be
+  co-located; DP width shrinks), and report the batch re-sharding plan.
+  Checkpoints store logical shardings, so restore-on-new-mesh is exact.
+* ``StragglerMonitor`` — per-step duration EWMA + tail detection; hosts
+  slower than ``threshold x`` the fleet median for ``patience`` consecutive
+  steps are flagged for eviction (the supervisor then treats them as failed —
+  eviction beats waiting at scale).
+* ``TrainSupervisor`` — the restart loop: run steps, on failure restore the
+  latest checkpoint onto the re-planned mesh and continue.  The data pipeline
+  is a pure function of (seed, step, shard), so no data state is lost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+
+class HeartbeatRegistry:
+    def __init__(self, hosts: Sequence[str], timeout_s: float = 30.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout_s = timeout_s
+        self.clock = clock
+        self._last: Dict[str, float] = {h: clock() for h in hosts}
+
+    def beat(self, host: str) -> None:
+        self._last[host] = self.clock()
+
+    def alive(self) -> Set[str]:
+        now = self.clock()
+        return {h for h, t in self._last.items()
+                if now - t <= self.timeout_s}
+
+    def dead(self) -> Set[str]:
+        return set(self._last) - self.alive()
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    data: int
+    model: int
+    hosts_used: Tuple[str, ...]
+    dropped_batch_shards: int
+
+    @property
+    def chips(self) -> int:
+        return self.data * self.model
+
+
+def plan_elastic_mesh(alive_hosts: Sequence[str], chips_per_host: int,
+                      model_axis: int, old_data_axis: int) -> ElasticPlan:
+    """Largest (data, model) mesh from survivors, keeping model groups whole.
+
+    model-axis groups must be intact (TP collectives are latency-critical),
+    so hosts are consumed in model-group quanta; the data axis shrinks to the
+    largest power of two that the surviving chips support (power-of-two DP
+    keeps gradient all-reduce butterflies regular).
+    """
+    alive = sorted(alive_hosts)
+    total_chips = len(alive) * chips_per_host
+    max_data = total_chips // model_axis
+    if max_data < 1:
+        raise RuntimeError("not enough hosts for one model group")
+    data = 2 ** int(math.log2(max_data))
+    used_chips = data * model_axis
+    hosts_needed = math.ceil(used_chips / chips_per_host)
+    return ElasticPlan(data=data, model=model_axis,
+                       hosts_used=tuple(alive[:hosts_needed]),
+                       dropped_batch_shards=old_data_axis - data)
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 1.5, patience: int = 3,
+                 ewma: float = 0.7):
+        self.threshold = threshold
+        self.patience = patience
+        self.ewma = ewma
+        self._avg: Dict[str, float] = {}
+        self._strikes: Dict[str, int] = {}
+
+    def record(self, host: str, step_seconds: float) -> None:
+        prev = self._avg.get(host, step_seconds)
+        self._avg[host] = self.ewma * prev + (1 - self.ewma) * step_seconds
+
+    def stragglers(self) -> Set[str]:
+        if len(self._avg) < 2:
+            return set()
+        med = sorted(self._avg.values())[len(self._avg) // 2]
+        out = set()
+        for h, v in self._avg.items():
+            if v > self.threshold * med:
+                self._strikes[h] = self._strikes.get(h, 0) + 1
+            else:
+                self._strikes[h] = 0
+            if self._strikes.get(h, 0) >= self.patience:
+                out.add(h)
+        return out
+
+
+@dataclasses.dataclass
+class TrainSupervisor:
+    """Checkpoint/restart orchestration (mesh-agnostic, tested in-process).
+
+    run(): executes ``step_fn(step) -> metrics`` until ``total_steps``;
+    ``failure_detector()`` is polled between steps; on failure the supervisor
+    calls ``restart_fn(alive_hosts)`` (rebuild mesh + restore checkpoint) and
+    continues from the restored step.
+    """
+    total_steps: int
+    step_fn: Callable[[int], Dict]
+    save_every: int
+    save_fn: Callable[[int], None]
+    restore_fn: Callable[[], int]            # returns step to resume from
+    failure_detector: Callable[[], bool]
+    restart_fn: Callable[[], None]
+    max_restarts: int = 8
+
+    def run(self, start_step: int = 0) -> Tuple[int, List[Dict]]:
+        step = start_step
+        restarts = 0
+        history: List[Dict] = []
+        while step < self.total_steps:
+            if self.failure_detector():
+                if restarts >= self.max_restarts:
+                    raise RuntimeError("restart budget exhausted")
+                restarts += 1
+                self.restart_fn()
+                step = self.restore_fn()
+                continue
+            try:
+                metrics = self.step_fn(step)
+            except Exception:
+                if restarts >= self.max_restarts:
+                    raise
+                restarts += 1
+                self.restart_fn()
+                step = self.restore_fn()
+                continue
+            history.append(metrics)
+            step += 1
+            if step % self.save_every == 0:
+                self.save_fn(step)
+        return restarts, history

@@ -1,0 +1,134 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret=True on CPU)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from numpy.testing import assert_allclose
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+# ------------------------------------------------------------------ rir_matmul
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (128, 128, 256, 128, 128, 128),
+    (256, 384, 512, 128, 128, 128),
+    (256, 256, 1024, 128, 256, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rir_matmul_sweep(m, k, n, bm, bn, bk, dtype):
+    a, b = _arr((m, k), dtype), _arr((k, n), dtype)
+    perm = tuple(int(x) for x in RNG.permutation(n // bn))
+    y = ops.rir_matmul(a, b, perm, block_m=bm, block_n=bn, block_k=bk)
+    yr = ref.rir_matmul(a, b, perm, bn)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32),
+                    rtol=tol, atol=tol)
+
+
+def test_rir_matmul_identity_equals_plain():
+    a, b = _arr((128, 128)), _arr((128, 256))
+    y = ops.rir_matmul(a, b, None)
+    assert_allclose(np.asarray(y), np.asarray(a @ b), rtol=2e-4, atol=2e-4)
+
+
+def test_rir_matmul_is_zero_cost_relayout():
+    """The RIR claim: permuted output == plain output with columns moved."""
+    a, b = _arr((128, 256)), _arr((256, 512))
+    perm = (2, 0, 3, 1)
+    y = np.asarray(ops.rir_matmul(a, b, perm))
+    plain = np.asarray(a @ b)
+    for j, pj in enumerate(perm):
+        assert_allclose(y[:, pj * 128:(pj + 1) * 128],
+                        plain[:, j * 128:(j + 1) * 128], rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------- birrd_reduce
+@pytest.mark.parametrize("aw,d", [(8, 128), (16, 256), (16, 512)])
+def test_birrd_reduce_sweep(aw, d):
+    x = _arr((aw, d))
+    gids = [i // 2 for i in range(aw)]           # aw/2 groups of 2
+    ports = [2 * g for g in range(aw // 2)]
+    y = ops.birrd_reduce(x, gids, ports)
+    yr = ref.birrd_reduce(x, jnp.asarray(gids, jnp.int32),
+                          jnp.asarray(ports, jnp.int32), aw)
+    assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5, atol=1e-5)
+
+
+def test_birrd_pure_reorder_kernel():
+    x = _arr((8, 128))
+    perm = [int(p) for p in RNG.permutation(8)]
+    y = ops.birrd_reduce(x, list(range(8)), perm)
+    yr = ref.birrd_reduce(x, jnp.arange(8, dtype=jnp.int32),
+                          jnp.asarray(perm, jnp.int32), 8)
+    assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------ gqa_decode
+@pytest.mark.parametrize("b,hq,hkv,d,s", [
+    (2, 8, 2, 64, 512), (1, 4, 4, 128, 1024), (3, 8, 1, 64, 2048),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gqa_decode_sweep(b, hq, hkv, d, s, dtype):
+    q = _arr((b, hq, d), dtype)
+    k = _arr((b, s, hkv, d), dtype)
+    v = _arr((b, s, hkv, d), dtype)
+    lens = jnp.asarray(RNG.integers(s // 2, s + 1, size=b), jnp.int32)
+    y = ops.gqa_decode(q, k, v, lens)
+    yr = ref.gqa_decode(q, k, v, lens)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 5e-4
+    assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32),
+                    rtol=tol, atol=tol)
+
+
+def test_gqa_decode_respects_lengths():
+    """KV beyond `length` must not affect the output."""
+    b, hq, hkv, d, s = 1, 4, 2, 64, 512
+    q = _arr((b, hq, d))
+    k = _arr((b, s, hkv, d))
+    v = _arr((b, s, hkv, d))
+    lens = jnp.asarray([256], jnp.int32)
+    y1 = ops.gqa_decode(q, k, v, lens)
+    k2 = k.at[:, 300:].set(99.0)
+    v2 = v.at[:, 300:].set(-99.0)
+    y2 = ops.gqa_decode(q, k2, v2, lens)
+    assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6, atol=1e-6)
+
+
+# ----------------------------------------------------------------- linear_scan
+@pytest.mark.parametrize("b,h,t,dk,dv,chunk", [
+    (2, 3, 128, 32, 64, 64), (1, 2, 256, 64, 64, 32), (2, 1, 192, 16, 16, 64),
+])
+def test_linear_scan_sweep(b, h, t, dk, dv, chunk):
+    q, k = _arr((b, h, t, dk)), _arr((b, h, t, dk))
+    v = _arr((b, h, t, dv))
+    w = jnp.asarray(-np.abs(RNG.normal(size=(b, h, t, dk)) * 0.2), jnp.float32)
+    y = ops.linear_scan(q, k, v, w, chunk=chunk)
+    yr = ref.linear_scan(q, k, v, w)
+    assert_allclose(np.asarray(y), np.asarray(yr), rtol=3e-3, atol=3e-3)
+
+
+def test_linear_scan_chunked_ref_matches_stepwise():
+    """The chunked XLA path (dry-run) == the exact per-step recurrence."""
+    b, h, t, dk, dv = 2, 2, 128, 32, 48
+    q, k = _arr((b, h, t, dk)), _arr((b, h, t, dk))
+    v = _arr((b, h, t, dv))
+    w = jnp.asarray(-np.abs(RNG.normal(size=(b, h, t, dk)) * 0.3), jnp.float32)
+    y1 = ref.linear_scan_chunked(q, k, v, w, chunk=32)
+    y2 = ref.linear_scan(q, k, v, w)
+    assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-3, atol=2e-3)
+
+
+def test_linear_scan_decay_semantics():
+    """With -inf decay the state resets: output == per-step outer product."""
+    b, h, t, dk, dv = 1, 1, 16, 8, 8
+    q, k, v = _arr((b, h, t, dk)), _arr((b, h, t, dk)), _arr((b, h, t, dv))
+    w = jnp.full((b, h, t, dk), -60.0)   # kills all history
+    y = ops.linear_scan(q, k, v, w)
+    expect = jnp.einsum("bhtd,bhtd->bht", q, k)[..., None] * v
+    assert_allclose(np.asarray(y), np.asarray(expect), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,91 @@
+"""Layout algebra + bank-conflict model (paper §II-B, §V)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import Buffer, Layout, conv_layout_space
+from repro.core.dataflow import ConvWorkload, Dataflow
+from repro.core.conflicts import assess_iact_conflicts
+
+
+def test_parse_roundtrip():
+    lay = Layout.parse("CHW_W4H2C2")
+    assert lay.inter == ("C", "H", "W")
+    assert lay.intra == (("W", 4), ("H", 2), ("C", 2))
+    assert lay.line_size == 16
+    assert lay.name() == "CHW_W4H2C2"
+
+
+def test_paper_fig3_addressing():
+    # 'CHW_W4H2C2': 4 W innermost, then 2 H, then 2 C within a line
+    lay = Layout.parse("CHW_W4H2C2")
+    dims = {"C": 4, "H": 4, "W": 8}
+    line0, off0 = lay.address({"C": 0, "H": 0, "W": 0}, dims)
+    assert (line0, off0) == (0, 0)
+    _, off_w3 = lay.address({"C": 0, "H": 0, "W": 3}, dims)
+    assert off_w3 == 3
+    _, off_h1 = lay.address({"C": 0, "H": 1, "W": 0}, dims)
+    assert off_h1 == 4
+    _, off_c1 = lay.address({"C": 1, "H": 0, "W": 0}, dims)
+    assert off_c1 == 8
+    # inter-line: C tiles vary fastest across lines
+    line_c2, _ = lay.address({"C": 2, "H": 0, "W": 0}, dims)
+    assert line_c2 == 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 3), st.integers(0, 7), st.integers(0, 15))
+def test_addressing_is_injective(c, h, w):
+    """No two distinct coordinates share an address (layout is a bijection)."""
+    lay = Layout.parse("HWC_C4W4H2")
+    dims = {"C": 4, "H": 8, "W": 16}
+    seen = {}
+    addr = lay.address({"C": c, "H": h, "W": w}, dims)
+    for cc in range(4):
+        for hh in range(8):
+            for ww in range(16):
+                a = lay.address({"C": cc, "H": hh, "W": ww}, dims)
+                key = (cc, hh, ww)
+                if a == addr:
+                    assert key == (c, h, w) or a != addr
+
+
+def test_address_bijection_exhaustive():
+    lay = Layout.parse("HWC_C4W8")
+    dims = {"C": 8, "H": 4, "W": 16}
+    seen = set()
+    for c in range(8):
+        for h in range(4):
+            for w in range(16):
+                a = lay.address({"C": c, "H": h, "W": w}, dims)
+                assert a not in seen
+                seen.add(a)
+    assert len(seen) == 8 * 4 * 16
+
+
+def test_buffer_conflict_slowdown():
+    buf = Buffer(num_lines=64, line_size=32, conflict_depth=8, ports=2)
+    assert buf.access_slowdown([0, 1]) == 1.0           # same bank, 2 ports
+    assert buf.access_slowdown([0, 1, 2, 3]) == 2.0     # 4 lines / 2 ports
+    assert buf.access_slowdown([0, 8, 16, 24]) == 1.0   # spread across banks
+
+
+def test_paper_fig4_insight1_discordance():
+    """ResNet-50 layer 47-style: channel-parallel dataflow + row-major layout
+    is discordant (bank conflicts); channel-last is concordant."""
+    wl = ConvWorkload(M=256, C=256, P=14, Q=14, R=3, S=3, name="res50-l47")
+    df = Dataflow(spatial=(("C", 4),))  # channel-parallel x4 (paper Fig. 4 D1)
+    buf = Buffer(num_lines=4096, line_size=4, conflict_depth=8, ports=2)
+    row_major = Layout(inter=("C", "H", "W"), intra=(("W", 4),))
+    chan_last = Layout(inter=("H", "W", "C"), intra=(("C", 4),))
+    bad = assess_iact_conflicts(wl, df, row_major, buf)
+    good = assess_iact_conflicts(wl, df, chan_last, buf)
+    assert good.concordant
+    assert not bad.concordant
+    assert bad.slowdown >= 2.0  # 4 lines in one bank through 2 ports
+
+
+def test_layout_space_has_paper_entries():
+    names = [l.name() for l in conv_layout_space()]
+    assert "HWC_C32" in names and "HWC_C4W8" in names

@@ -14,7 +14,7 @@ import traceback
 def main() -> None:
     from . import (fig2_layout_gap, fig4_mappings, fig10_gemm_util,
                    fig12_fixed_dataflow, fig13_layoutloop, fig14_area,
-                   kernels_bench, roofline)
+                   fig_plan_switching, kernels_bench, roofline)
     suites = [
         ("fig2 (layout gap)", fig2_layout_gap.main),
         ("fig4 (mapping table)", fig4_mappings.main),
@@ -22,6 +22,7 @@ def main() -> None:
         ("fig12 (vs fixed dataflow)", fig12_fixed_dataflow.main),
         ("fig13 (Layoutloop comparison)", fig13_layoutloop.main),
         ("fig14/tab5 (area & power)", fig14_area.main),
+        ("fig_plan (network-planned switching)", fig_plan_switching.main),
         ("kernels (microbench)", kernels_bench.main),
         ("roofline (dry-run terms)", roofline.main),
     ]

@@ -7,7 +7,9 @@ footprint touches at most ``ports`` lines per bank; otherwise the pair is
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable
+from typing import Dict
+
+import numpy as np
 
 from .dataflow import ConvWorkload, Dataflow
 from .layout import Buffer, Layout
@@ -46,33 +48,61 @@ def assess_iact_conflicts(wl: ConvWorkload, df: Dataflow, layout: Layout,
         return ConflictReport(1.0, 1.0, 1.0, True)
 
     iact_dims = wl.iact_dims()
+    dims = wl.dims()
+
+    # spatial footprint, vectorized: one offset array per loop dim (repeated
+    # spatial entries on the same dim accumulate, as in ``spatial_footprint``)
+    axes = [d for d, _ in df.spatial]
+    ranges = [np.arange(min(f, dims[d])) for d, f in df.spatial]
+    if ranges:
+        grids = np.meshgrid(*ranges, indexing="ij")
+        offs: Dict[str, np.ndarray] = {}
+        for d, g in zip(axes, grids):
+            offs[d] = offs.get(d, 0) + g.reshape(-1)
+    else:
+        offs = {}
+    footprint = next(iter(offs.values())).size if offs else 1
+
+    def loop_val(base: Dict[str, int], d: str):
+        return base.get(d, 0) + offs.get(d, 0)
+
+    def sample_lines(lay: Layout, base: Dict[str, int]) -> np.ndarray:
+        coords = {
+            "N": np.broadcast_to(np.asarray(loop_val(base, "N")), (footprint,)),
+            "C": np.broadcast_to(np.asarray(loop_val(base, "C")), (footprint,)),
+            "H": np.broadcast_to(np.asarray(
+                loop_val(base, "P") * wl.stride + loop_val(base, "R")),
+                (footprint,)),
+            "W": np.broadcast_to(np.asarray(
+                loop_val(base, "Q") * wl.stride + loop_val(base, "S")),
+                (footprint,)),
+        }
+        return np.unique(lay.lines_array(coords, iact_dims))
+
+    def bank_slowdown(lines: np.ndarray, relief: str) -> float:
+        banks = lines // buffer.conflict_depth
+        counts = np.unique(banks, return_counts=True)[1]
+        if relief == "line_rotation":
+            counts = np.maximum(1, counts - 1)
+        if counts.size == 0:
+            return 1.0
+        return max(float(counts.max()) / buffer.ports, 1.0)
+
+    t_layout = None
+    if reorder == "transpose":
+        # transposed orientation: lines<->offsets swap; a footprint confined
+        # to few offsets reads few "columns" instead.
+        t_layout = Layout(inter=tuple(d for d, _ in layout.intra) or layout.inter,
+                          intra=tuple((d, 1) for d in layout.inter))
+
     slowdowns, line_counts = [], []
     for base in df.temporal_samples(wl, max_samples):
-        coords = [wl.iact_coord(pt) for pt in df.spatial_footprint(wl, base)]
-        lines = layout.lines_for(coords, iact_dims)
-        per_bank: dict[int, int] = {}
-        for ln in lines:
-            b = buffer.bank_of(ln)
-            per_bank[b] = per_bank.get(b, 0) + 1
-        if reorder == "line_rotation":
-            per_bank = {b: max(1, n - 1) for b, n in per_bank.items()}
-        sd = max((max(n / buffer.ports, 1.0) for n in per_bank.values()),
-                 default=1.0)
-        if reorder == "transpose":
-            # transposed orientation: lines<->offsets swap; a footprint confined
-            # to few offsets reads few "columns" instead.
-            t_layout = Layout(inter=tuple(d for d, _ in layout.intra) or layout.inter,
-                              intra=tuple((d, 1) for d in layout.inter))
-            t_lines = t_layout.lines_for(coords, iact_dims)
-            t_per_bank: dict[int, int] = {}
-            for ln in t_lines:
-                b = buffer.bank_of(ln)
-                t_per_bank[b] = t_per_bank.get(b, 0) + 1
-            t_sd = max((max(n / buffer.ports, 1.0) for n in t_per_bank.values()),
-                       default=1.0)
-            sd = min(sd, t_sd)
+        lines = sample_lines(layout, base)
+        sd = bank_slowdown(lines, reorder)
+        if t_layout is not None:
+            sd = min(sd, bank_slowdown(sample_lines(t_layout, base), "none"))
         slowdowns.append(sd)
-        line_counts.append(len(lines))
+        line_counts.append(lines.size)
     avg_sd = sum(slowdowns) / len(slowdowns) if slowdowns else 1.0
     worst = max(slowdowns, default=1.0)
     avg_lines = sum(line_counts) / len(line_counts) if line_counts else 0.0

@@ -21,6 +21,8 @@ import math
 import re
 from typing import Dict, Iterable, Mapping, Sequence, Tuple
 
+import numpy as np
+
 Coord = Mapping[str, int]
 
 
@@ -83,6 +85,23 @@ class Layout:
 
     def lines_for(self, coords: Iterable[Coord], dims: Mapping[str, int]) -> set:
         return {self.address(c, dims)[0] for c in coords}
+
+    def lines_array(self, coords: Mapping[str, "np.ndarray"],
+                    dims: Mapping[str, int]) -> "np.ndarray":
+        """Vectorized line index of coordinate arrays (same math as
+        ``address``; the conflict assessor's hot path)."""
+        shape = next(iter(coords.values())).shape
+        rem = {d: np.asarray(v, np.int64) for d, v in coords.items()}
+        for d, s in self.intra:
+            rem[d] = rem[d] // s
+        intra = self.intra_sizes
+        line = np.zeros(shape, np.int64)
+        lmul = 1
+        for d in self.inter:
+            extent = max(1, math.ceil(dims[d] / intra.get(d, 1)))
+            line = line + (rem.get(d, 0) % extent) * lmul
+            lmul *= extent
+        return line
 
 
 @dataclasses.dataclass(frozen=True)

@@ -30,14 +30,11 @@ class Metrics:
     energy_pj: float
     dram_bytes: float
     line_reads: float
+    pj_per_mac: float = float("nan")
 
     @property
     def edp(self) -> float:
         return self.energy_pj * self.cycles
-
-    @property
-    def pj_per_mac(self) -> float:  # populated by evaluate()
-        return getattr(self, "_pj_per_mac", float("nan"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,13 +47,75 @@ class EvalConfig:
     dtype_bytes: int = 1      # int8
 
 
-def evaluate(wl: ConvWorkload, df: Dataflow, layout: Layout,
-             cfg: EvalConfig) -> Metrics:
-    """Latency + energy of one layer under one (dataflow, layout) pair."""
+@dataclasses.dataclass(frozen=True)
+class ReorderOverhead:
+    """Cost of materializing a layer's oActs in a *different* layout than the
+    dataflow naturally produces, under one reorder implementation.
+
+    This is the layer-boundary *transition cost* the network planner
+    (``repro.plan.search``) charges when consecutive layers disagree on the
+    boundary layout; ``evaluate`` charges the same quantity inline.
+    """
+
+    cycles: float          # exposed (non-overlapped) latency
+    energy_pj: float
+    dram_bytes: float      # extra off-chip traffic (off-chip reorder only)
+    line_reads: float      # extra on-chip line reads (RAR pass)
+    line_writes: float
+
+
+def reorder_overhead(wl: ConvWorkload, cfg: EvalConfig, mode: str,
+                     compute_cycles: float = 0.0) -> ReorderOverhead:
+    """Overhead of relayouting ``wl``'s oAct tensor via ``mode``.
+
+    ``compute_cycles`` is the producing layer's compute time; off-chip
+    round-trips overlap with it and only the remainder is exposed (pass 0.0
+    for a standalone transition, e.g. a residual-edge relayout).
+    """
     e = cfg.energy
+    oact_words = math.prod(wl.oact_dims().values())
+    oact_lines = max(1.0, oact_words / cfg.buffer.line_size)
+    if mode == "offchip":
+        # oActs round-trip through DRAM for relayout (paper Fig. 6a); latency
+        # overlaps with compute of the next tile, the remainder is exposed.
+        rt_bytes = 2.0 * oact_words * cfg.dtype_bytes
+        rt_cycles = rt_bytes / cfg.dram_bytes_per_cycle
+        return ReorderOverhead(
+            cycles=max(0.0, rt_cycles - 0.9 * compute_cycles),
+            energy_pj=e.dram_bytes_pj(rt_bytes), dram_bytes=rt_bytes,
+            line_reads=0.0, line_writes=0.0)
+    if mode in ("line_rotation", "transpose", "row_reorder"):
+        # RAR (paper Fig. 6b): oActs are re-read, pushed through the reorder
+        # unit and re-written — an exposed on-chip pass over the tensor.
+        return ReorderOverhead(
+            cycles=max(1.0, oact_lines / cfg.buffer.ports),
+            energy_pj=oact_lines * (e.sram_line_read_pj + e.sram_line_write_pj),
+            dram_bytes=0.0, line_reads=oact_lines, line_writes=oact_lines)
+    if mode == "rir":
+        # BIRRD hop energy: each oAct word traverses 2*log2(AW) Egg stages;
+        # the reorder rides the reduction, so no cycles are exposed.
+        stages = 2 * int(math.log2(cfg.nest.aw))
+        return ReorderOverhead(
+            cycles=0.0,
+            energy_pj=oact_words * stages * (e.noc_hop_pj + e.adder_pj / 2),
+            dram_bytes=0.0, line_reads=0.0, line_writes=0.0)
+    if mode == "none":
+        return ReorderOverhead(0.0, 0.0, 0.0, 0.0, 0.0)
+    raise ValueError(f"unknown reorder mode {mode!r}")
+
+
+def evaluate(wl: ConvWorkload, df: Dataflow, layout: Layout,
+             cfg: EvalConfig, reorder: Optional[str] = None) -> Metrics:
+    """Latency + energy of one layer under one (dataflow, layout) pair.
+
+    ``reorder`` overrides ``cfg.reorder`` for this call (the planner sweeps
+    per-boundary reorder modes without rebuilding configs).
+    """
+    e = cfg.energy
+    mode = cfg.reorder if reorder is None else reorder
     read_relief = {"none": "none", "offchip": "none", "line_rotation":
                    "line_rotation", "transpose": "transpose",
-                   "row_reorder": "none", "rir": "arbitrary"}[cfg.reorder]
+                   "row_reorder": "none", "rir": "arbitrary"}[mode]
     rep = assess_iact_conflicts(wl, df, layout, cfg.buffer, reorder=read_relief)
     timing = nest_cycles(cfg.nest, wl, df, slowdown=rep.slowdown)
     compute_cycles = timing.total_cycles
@@ -73,44 +132,25 @@ def evaluate(wl: ConvWorkload, df: Dataflow, layout: Layout,
     oact_lines = max(1.0, oact_words / cfg.buffer.line_size)
     line_writes = oact_lines
 
-    reorder_cycles = 0.0
-    extra_energy = 0.0
-    dram_bytes = float(tensor_bytes)
-    if cfg.reorder == "offchip":
-        # oActs round-trip through DRAM for relayout (paper Fig. 6a); latency
-        # overlaps with compute of the next tile, the remainder is exposed.
-        rt_bytes = 2.0 * oact_words * cfg.dtype_bytes
-        rt_cycles = rt_bytes / cfg.dram_bytes_per_cycle
-        reorder_cycles = max(0.0, rt_cycles - 0.9 * compute_cycles)
-        extra_energy += e.dram_bytes_pj(rt_bytes)
-        dram_bytes += rt_bytes
-    elif cfg.reorder in ("line_rotation", "transpose", "row_reorder"):
-        # RAR (paper Fig. 6b): oActs are re-read, pushed through the reorder
-        # unit and re-written — an exposed on-chip pass over the tensor.
-        passes = max(1.0, oact_lines / cfg.buffer.ports)
-        reorder_cycles = passes
-        extra_energy += oact_lines * (e.sram_line_read_pj + e.sram_line_write_pj)
-        line_reads += oact_lines
-        line_writes += oact_lines
-    elif cfg.reorder == "rir":
-        # BIRRD hop energy: each oAct word traverses 2*log2(AW) Egg stages.
-        stages = 2 * int(math.log2(cfg.nest.aw))
-        extra_energy += oact_words * stages * (e.noc_hop_pj + e.adder_pj / 2)
+    ro = reorder_overhead(wl, cfg, mode, compute_cycles)
+    reorder_cycles = ro.cycles
+    line_reads += ro.line_reads
+    line_writes += ro.line_writes
+    dram_bytes = float(tensor_bytes) + ro.dram_bytes
 
     energy = (
         wl.macs() * (e.mac_pj + 2 * e.reg_access_pj)
         + line_reads * e.sram_line_read_pj
         + line_writes * e.sram_line_write_pj
         + e.dram_bytes_pj(tensor_bytes)
-        + extra_energy
+        + ro.energy_pj
     )
     cycles = compute_cycles + reorder_cycles
-    m = Metrics(cycles=cycles, compute_cycles=compute_cycles,
-                reorder_cycles=reorder_cycles, slowdown=rep.slowdown,
-                utilization=util, energy_pj=energy, dram_bytes=dram_bytes,
-                line_reads=line_reads)
-    object.__setattr__(m, "_pj_per_mac", energy / max(wl.macs(), 1))
-    return m
+    return Metrics(cycles=cycles, compute_cycles=compute_cycles,
+                   reorder_cycles=reorder_cycles, slowdown=rep.slowdown,
+                   utilization=util, energy_pj=energy, dram_bytes=dram_bytes,
+                   line_reads=line_reads,
+                   pj_per_mac=energy / max(wl.macs(), 1))
 
 
 @dataclasses.dataclass(frozen=True)

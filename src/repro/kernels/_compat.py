@@ -1,0 +1,14 @@
+"""Version compatibility for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and back,
+depending on release line); resolve whichever name the installed jax exposes
+so the kernels import cleanly on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

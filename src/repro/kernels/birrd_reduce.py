@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from ._compat import CompilerParams
 
 from repro.core.birrd import ADD_LEFT, ADD_RIGHT, PASS, SWAP, Birrd
 
@@ -84,7 +85,7 @@ def birrd_apply_p(x: jax.Array, stage_mats: jax.Array, *, block_d: int = 128,
         ],
         out_specs=pl.BlockSpec((aw, block_d), lambda j: (0, j)),
         out_shape=jax.ShapeDtypeStruct((aw, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(stage_mats, x)

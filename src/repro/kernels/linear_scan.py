@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 _CLAMP = 30.0
 
 
@@ -106,7 +108,7 @@ def linear_scan(q: jax.Array, k: jax.Array, v: jax.Array,
         out_specs=pl.BlockSpec((1, chunk, dv), lambda bh, c: (bh, c, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, T, dv), v.dtype),
         scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf, wf)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 
 def _kernel(perm_ref, a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
     del perm_ref  # consumed by the output index map
@@ -72,7 +74,7 @@ def rir_matmul_p(a: jax.Array, b: jax.Array, out_block_perm: jax.Array, *,
             scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(out_block_perm.astype(jnp.int32), a, b)

@@ -8,19 +8,25 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes):
+    # jax < 0.5 has no sharding.AxisType / axis_types kwarg (everything is
+    # implicitly Auto there); newer jax wants it spelled out.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 chips per pod; 2 pods via the DCN-connected "pod" axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_local_mesh(model_axis: int = 1):
     """Degenerate mesh over the locally visible devices (tests / smoke)."""
     n = len(jax.devices())
     data = n // model_axis
-    return jax.make_mesh(
-        (data, model_axis), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _mesh((data, model_axis), ("data", "model"))

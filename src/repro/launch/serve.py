@@ -1,16 +1,52 @@
 """Batched serving driver: prefill a prompt batch, decode with KV caches.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3p2_3b --smoke \
-        --batch 4 --prompt-len 32 --gen 16
+        --batch 4 --prompt-len 32 --gen 16 --plan plan.json
 """
 from __future__ import annotations
 
 import argparse
+import pathlib
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def _plan_for(cfg, args) -> None:
+    """Load (or co-search and save) the network execution plan for this arch.
+
+    The plan artifact records per-layer (dataflow, layout, reorder, kernel,
+    epilogue perm); a stale artifact (graph hash mismatch, e.g. after a
+    config change) is re-planned and overwritten.
+    """
+    from repro.core.layoutloop import EvalConfig
+    from repro.plan import (ExecutionPlan, NetworkPlanner, PlannerOptions,
+                            config_key, from_arch_config)
+
+    graph = from_arch_config(cfg, seq=args.prompt_len + args.gen)
+    eval_cfg = EvalConfig()
+    opts = PlannerOptions(switch_modes=("rir",), parallel_dims=("C", "P", "Q"))
+    want_key = config_key(eval_cfg, opts.key())
+    path = pathlib.Path(args.plan)
+    plan = None
+    if path.exists():
+        try:
+            plan = ExecutionPlan.load(path)
+        except Exception as e:  # unreadable/corrupt/foreign-version artifact
+            print(f"[serve] plan {path} is unreadable ({e}); re-planning")
+        else:
+            if (plan.graph_hash, plan.config_key) != \
+                    (graph.graph_hash(), want_key):
+                print(f"[serve] plan {path} is stale (graph/config "
+                      "mismatch); re-planning")
+                plan = None
+    if plan is None:
+        plan = NetworkPlanner(graph, eval_cfg, opts).plan()
+        plan.save(path)
+        print(f"[serve] planned {len(plan)} layers -> {path}")
+    print(plan.summary())
 
 
 def main() -> None:
@@ -21,6 +57,9 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--plan", default=None, metavar="PATH",
+                    help="execution-plan artifact: load it if it exists, "
+                    "else network-plan this arch and save it there")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -28,6 +67,8 @@ def main() -> None:
     from repro.models import build_model
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.plan:
+        _plan_for(cfg, args)
     model = build_model(cfg)
     mesh = make_local_mesh(args.model_axis)
     key = jax.random.PRNGKey(0)

@@ -1,0 +1,28 @@
+"""repro.plan — network-level dataflow/layout planning (FEATHER across layers).
+
+``cosearch_layer`` optimizes each layer in isolation; this package plans the
+*whole network*: a layer-graph IR (``graph``), a Viterbi/DP co-search over
+layer-boundary layouts with reorder-implementation transition costs
+(``search``), a serializable ``ExecutionPlan`` artifact with a plan cache
+(``plan``), and a plan-driven executor that runs the schedule through the
+Pallas RIR kernels (``executor``).
+"""
+from .graph import (LayerGraph, bert_graph, from_arch_config, from_layers,
+                    mobilenet_v3_graph, resnet50_graph)
+from .plan import (ExecutionPlan, PlanCache, PlanStep, config_key,
+                   layout_block_perm)
+from .search import (NetworkPlanner, PlannerOptions, brute_force_plan,
+                     fixed_plan, greedy_plan, plan_network)
+from .executor import (PlanError, execute_plan, execute_plan_reference,
+                       permute_weight_blocks)
+
+__all__ = [
+    "LayerGraph", "from_layers", "resnet50_graph", "mobilenet_v3_graph",
+    "bert_graph", "from_arch_config",
+    "ExecutionPlan", "PlanStep", "PlanCache", "config_key",
+    "layout_block_perm",
+    "NetworkPlanner", "PlannerOptions", "plan_network", "greedy_plan",
+    "brute_force_plan", "fixed_plan",
+    "PlanError", "execute_plan", "execute_plan_reference",
+    "permute_weight_blocks",
+]

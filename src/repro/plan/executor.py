@@ -1,0 +1,163 @@
+"""Plan-driven execution: run an ``ExecutionPlan`` through the Pallas kernels.
+
+The executor is the TPU realization of the planner's promise: every layer's
+output is written by the ``rir_matmul`` epilogue *directly in the layout the
+next layer wants* (RIR — the reorder rides the reduction), so no standalone
+relayout pass ever runs between layers.  Concretely:
+
+* A boundary layout reduces, at kernel granularity, to a permutation of
+  128-wide feature blocks (``plan.layout_block_perm``).
+* The epilogue permutation of step *i* is derived from consecutive plan
+  entries: it is the block order of ``steps[i].out_layout`` — which the plan
+  guarantees equals ``steps[i+1].in_layout``.
+* Weights are static, so each layer's weight matrix is pre-arranged offline
+  (`permute_weight_blocks`) to contract correctly against an activation
+  stored in the incoming boundary layout — the consumer reads concordantly,
+  for free.
+
+The executor's output (returned in canonical block order) is bit-identical
+to the plain ``x @ W1 @ ... @ Wn`` chain; tests assert this against the
+``kernels/ref.py`` oracles.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .plan import RIR_BLOCK, ExecutionPlan, layout_block_perm
+
+
+class PlanError(ValueError):
+    """A plan is internally inconsistent or doesn't fit the given tensors."""
+
+
+def apply_block_perm(x: jax.Array, perm: Sequence[int],
+                     block: int = RIR_BLOCK) -> jax.Array:
+    """Store canonical column-block j at slot ``perm[j]`` (RIR write order)."""
+    n = len(perm)
+    if n * block != x.shape[-1]:
+        raise PlanError(f"perm of {n} blocks x {block} != dim {x.shape[-1]}")
+    cols = jnp.zeros(n, jnp.int32).at[jnp.asarray(perm)].set(jnp.arange(n))
+    idx = (cols[:, None] * block + jnp.arange(block)[None, :]).reshape(-1)
+    return x[..., idx]
+
+
+def invert_block_perm(x: jax.Array, perm: Sequence[int],
+                      block: int = RIR_BLOCK) -> jax.Array:
+    """Recover canonical order from a ``perm``-stored tensor."""
+    n = len(perm)
+    idx = (jnp.asarray(perm)[:, None] * block
+           + jnp.arange(block)[None, :]).reshape(-1)
+    return x[..., idx]
+
+
+def permute_weight_blocks(w: jax.Array, in_perm: Sequence[int],
+                          block: int = RIR_BLOCK) -> jax.Array:
+    """Offline weight prep: scatter K-blocks so ``w_eff`` contracts against an
+    activation stored in the incoming boundary layout."""
+    n = len(in_perm)
+    if n * block != w.shape[0]:
+        raise PlanError(f"in_perm of {n} blocks x {block} != K {w.shape[0]}")
+    cols = jnp.zeros(n, jnp.int32).at[jnp.asarray(in_perm)].set(jnp.arange(n))
+    idx = (cols[:, None] * block + jnp.arange(block)[None, :]).reshape(-1)
+    return w[idx, :]
+
+
+def _boundary_perms(plan: ExecutionPlan, x_dim: int,
+                    weights: Sequence[jax.Array],
+                    block: int) -> List[tuple]:
+    """Derive every boundary's block permutation from consecutive entries."""
+    steps = plan.steps
+    for i in range(len(steps) - 1):
+        if steps[i].out_layout != steps[i + 1].in_layout:
+            raise PlanError(
+                f"plan discontinuity at {steps[i].layer} -> "
+                f"{steps[i + 1].layer}: {steps[i].out_layout} != "
+                f"{steps[i + 1].in_layout}")
+    dims = [x_dim] + [w.shape[1] for w in weights]
+    perms = []
+    for b, dim in enumerate(dims):
+        name = steps[b].in_layout if b < len(steps) else steps[-1].out_layout
+        n_blocks = dim // block if dim % block == 0 else 1
+        if n_blocks <= 1:
+            perms.append((0,))
+            continue
+        # honour the perm the artifact recorded (boundary b is written by
+        # step b-1's epilogue) when it fits this tensor's block count;
+        # otherwise derive it from the boundary layout name
+        recorded = steps[b - 1].epilogue_perm if b > 0 else None
+        if recorded is not None and len(recorded) == n_blocks:
+            perms.append(tuple(recorded))
+        else:
+            perms.append(layout_block_perm(name, n_blocks))
+    return perms
+
+
+def execute_plan(plan: ExecutionPlan, x: jax.Array,
+                 weights: Sequence[jax.Array], *, block: int = RIR_BLOCK,
+                 activation: Optional[Callable[[jax.Array], jax.Array]] = None,
+                 use_pallas: bool = True) -> jax.Array:
+    """Execute a planned GEMM chain end-to-end; returns canonical output.
+
+    x: (tokens, K0); weights[i]: (K_i, M_i) with M_i == K_{i+1}.  Each step
+    runs the RIR matmul with the epilogue permutation derived from the plan's
+    consecutive boundary layouts; intermediate activations only ever exist in
+    their planned boundary layouts.  ``use_pallas=False`` swaps in the
+    ``kernels/ref.py`` oracle per step (the verification path).
+    """
+    if len(weights) != len(plan.steps):
+        raise PlanError(f"{len(weights)} weights for {len(plan.steps)} steps")
+    for i, w in enumerate(weights):
+        k_prev = x.shape[-1] if i == 0 else weights[i - 1].shape[1]
+        if w.shape[0] != k_prev:
+            raise PlanError(f"weight {i} K={w.shape[0]} != producer M={k_prev}")
+
+    perms = _boundary_perms(plan, x.shape[-1], weights, block)
+    cur = apply_block_perm(x, perms[0], block) if len(perms[0]) > 1 else x
+    for i, (step, w) in enumerate(zip(plan.steps, weights)):
+        in_perm, out_perm = perms[i], perms[i + 1]
+        w_eff = permute_weight_blocks(w, in_perm, block) \
+            if len(in_perm) > 1 else w
+        tiled = (cur.shape[0] % block == 0 and w_eff.shape[0] % block == 0
+                 and w_eff.shape[1] % block == 0)
+        if use_pallas and tiled and step.kernel == "rir_matmul":
+            cur = ops.rir_matmul(cur, w_eff, out_perm
+                                 if len(out_perm) > 1 else None,
+                                 block_m=block, block_n=block, block_k=block)
+        else:
+            y = jnp.dot(cur, w_eff, preferred_element_type=jnp.float32)
+            y = y.astype(cur.dtype)
+            cur = apply_block_perm(y, out_perm, block) \
+                if len(out_perm) > 1 else y
+        if activation is not None and i < len(plan.steps) - 1:
+            cur = activation(cur)    # elementwise: commutes with block perms
+    return invert_block_perm(cur, perms[-1], block) \
+        if len(perms[-1]) > 1 else cur
+
+
+def execute_plan_reference(plan: ExecutionPlan, x: jax.Array,
+                           weights: Sequence[jax.Array], *,
+                           block: int = RIR_BLOCK,
+                           activation: Optional[Callable] = None
+                           ) -> jax.Array:
+    """Same schedule through the ``kernels/ref.py`` oracle — the ground truth
+    the Pallas path is asserted against."""
+    perms = _boundary_perms(plan, x.shape[-1], weights, block)
+    cur = apply_block_perm(x, perms[0], block) if len(perms[0]) > 1 else x
+    for i, (step, w) in enumerate(zip(plan.steps, weights)):
+        in_perm, out_perm = perms[i], perms[i + 1]
+        w_eff = permute_weight_blocks(w, in_perm, block) \
+            if len(in_perm) > 1 else w
+        if len(out_perm) > 1:
+            cur = ref.rir_matmul(cur, w_eff, out_perm, block)
+        else:
+            cur = jnp.dot(cur, w_eff,
+                          preferred_element_type=jnp.float32).astype(cur.dtype)
+        if activation is not None and i < len(plan.steps) - 1:
+            cur = activation(cur)
+    return invert_block_perm(cur, perms[-1], block) \
+        if len(perms[-1]) > 1 else cur

@@ -1,0 +1,236 @@
+"""Serializable execution plans — the planner's output artifact.
+
+An ``ExecutionPlan`` records, per layer, the planned ``(dataflow, layout,
+reorder mode, kernel variant, epilogue permutation)`` plus predicted totals.
+It round-trips losslessly through JSON, so a plan computed once (planning
+sweeps the whole co-search space) can be shipped to the serving launcher and
+executed without re-searching.  ``PlanCache`` memoizes plans keyed by
+``(graph hash, eval-config fingerprint)`` with optional on-disk persistence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.dataflow import ConvWorkload, Dataflow
+from repro.core.layoutloop import EvalConfig
+
+PLAN_VERSION = 1
+RIR_BLOCK = 128   # kernel feature-block granularity (MXU lane width)
+
+
+# ------------------------------------------------------------- (de)serializers
+def workload_to_dict(wl: ConvWorkload) -> Dict:
+    return {"name": wl.name, "N": wl.N, "M": wl.M, "C": wl.C, "P": wl.P,
+            "Q": wl.Q, "R": wl.R, "S": wl.S, "stride": wl.stride}
+
+
+def workload_from_dict(d: Dict) -> ConvWorkload:
+    return ConvWorkload(**d)
+
+
+def dataflow_to_dict(df: Dataflow) -> Dict:
+    return {"spatial": [list(p) for p in df.spatial],
+            "order": list(df.order),
+            "tiles": [list(p) for p in df.tiles],
+            "name": df.name}
+
+
+def dataflow_from_dict(d: Dict) -> Dataflow:
+    return Dataflow(spatial=tuple((x, int(f)) for x, f in d["spatial"]),
+                    order=tuple(d["order"]),
+                    tiles=tuple((x, int(f)) for x, f in d["tiles"]),
+                    name=d["name"])
+
+
+def config_key(cfg: EvalConfig, extra: str = "") -> str:
+    """Stable fingerprint of an evaluation config (+ planner options)."""
+    return hashlib.sha256((repr(cfg) + "|" + extra).encode()).hexdigest()
+
+
+def layout_block_perm(layout_name: str, n_blocks: int) -> Tuple[int, ...]:
+    """Deterministic bijection: canonical feature block -> StaB bank slot.
+
+    The planner's layouts are line-level descriptions; at kernel granularity
+    (128-wide feature blocks) a boundary layout reduces to *which bank order
+    the blocks are stored in*.  Producer epilogue and consumer weight prep
+    just need to agree on one fixed bijection per layout; blocks are ranked
+    by a keyed hash so distinct layouts induce distinct block orders.
+    ``perm[j]`` = slot receiving canonical block ``j`` (the ``rir_matmul``
+    epilogue convention).
+    """
+    if n_blocks <= 1:
+        return tuple(range(max(n_blocks, 1)))
+    ranked = sorted(range(n_blocks), key=lambda j: hashlib.sha256(
+        f"{layout_name}:{j}".encode()).digest())
+    perm = [0] * n_blocks
+    for slot, block in enumerate(ranked):
+        perm[block] = slot
+    return tuple(perm)
+
+
+# -------------------------------------------------------------------- the plan
+@dataclasses.dataclass(frozen=True)
+class PlanStep:
+    """One layer's planned execution."""
+
+    layer: str
+    workload: ConvWorkload
+    dataflow: Dataflow
+    in_layout: str                 # boundary layout the layer reads
+    out_layout: str                # boundary layout its oActs are written in
+    reorder: str                   # none|offchip|...|rir (how out_layout is made)
+    kernel: str                    # 'rir_matmul' | 'ref'
+    epilogue_perm: Optional[Tuple[int, ...]]   # None = identity / not GEMM-able
+    cycles: float
+    energy_pj: float
+
+    def to_dict(self) -> Dict:
+        return {"layer": self.layer,
+                "workload": workload_to_dict(self.workload),
+                "dataflow": dataflow_to_dict(self.dataflow),
+                "in_layout": self.in_layout, "out_layout": self.out_layout,
+                "reorder": self.reorder, "kernel": self.kernel,
+                "epilogue_perm": (list(self.epilogue_perm)
+                                  if self.epilogue_perm is not None else None),
+                "cycles": self.cycles, "energy_pj": self.energy_pj}
+
+    @staticmethod
+    def from_dict(d: Dict) -> "PlanStep":
+        return PlanStep(
+            layer=d["layer"], workload=workload_from_dict(d["workload"]),
+            dataflow=dataflow_from_dict(d["dataflow"]),
+            in_layout=d["in_layout"], out_layout=d["out_layout"],
+            reorder=d["reorder"], kernel=d["kernel"],
+            epilogue_perm=(tuple(int(p) for p in d["epilogue_perm"])
+                           if d["epilogue_perm"] is not None else None),
+            cycles=float(d["cycles"]), energy_pj=float(d["energy_pj"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """A whole-network schedule: per-layer steps + predicted totals."""
+
+    graph_name: str
+    graph_hash: str
+    config_key: str
+    objective: str                 # cycles | edp
+    planner: str                   # 'network-dp' | 'greedy' | 'fixed' | ...
+    steps: Tuple[PlanStep, ...]
+    total_cycles: float
+    total_energy_pj: float
+    transition_cycles: float = 0.0   # part of total spent on boundary reorders
+    version: int = PLAN_VERSION
+
+    def __len__(self) -> int:
+        return len(self.steps)
+
+    def boundary_layouts(self) -> List[str]:
+        """[input layout of layer 0, out layout of each layer] — the DP path."""
+        if not self.steps:
+            return []
+        return [self.steps[0].in_layout] + [s.out_layout for s in self.steps]
+
+    def switch_count(self) -> int:
+        return sum(1 for s in self.steps if s.in_layout != s.out_layout)
+
+    # ------------------------------------------------------------- round trip
+    def to_json(self, indent: int = 2) -> str:
+        d = {"version": self.version, "graph_name": self.graph_name,
+             "graph_hash": self.graph_hash, "config_key": self.config_key,
+             "objective": self.objective, "planner": self.planner,
+             "total_cycles": self.total_cycles,
+             "total_energy_pj": self.total_energy_pj,
+             "transition_cycles": self.transition_cycles,
+             "steps": [s.to_dict() for s in self.steps]}
+        return json.dumps(d, indent=indent)
+
+    @staticmethod
+    def from_json(text: str) -> "ExecutionPlan":
+        d = json.loads(text)
+        if d.get("version") != PLAN_VERSION:
+            raise ValueError(f"plan version {d.get('version')} != "
+                             f"{PLAN_VERSION}")
+        return ExecutionPlan(
+            graph_name=d["graph_name"], graph_hash=d["graph_hash"],
+            config_key=d["config_key"], objective=d["objective"],
+            planner=d["planner"],
+            steps=tuple(PlanStep.from_dict(s) for s in d["steps"]),
+            total_cycles=float(d["total_cycles"]),
+            total_energy_pj=float(d["total_energy_pj"]),
+            transition_cycles=float(d.get("transition_cycles", 0.0)),
+            version=int(d["version"]))
+
+    def save(self, path: str | pathlib.Path) -> None:
+        p = pathlib.Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(self.to_json())
+
+    @staticmethod
+    def load(path: str | pathlib.Path) -> "ExecutionPlan":
+        return ExecutionPlan.from_json(pathlib.Path(path).read_text())
+
+    def summary(self) -> str:
+        lines = [f"plan[{self.planner}] {self.graph_name}: "
+                 f"{len(self.steps)} layers, {self.switch_count()} layout "
+                 f"switches, total {self.total_cycles:.3e} cycles "
+                 f"({self.transition_cycles:.3e} on transitions), "
+                 f"{self.total_energy_pj:.3e} pJ"]
+        for s in self.steps:
+            lines.append(
+                f"  {s.layer:22s} df={s.dataflow.label():12s} "
+                f"{s.in_layout:12s}->{s.out_layout:12s} "
+                f"reorder={s.reorder:8s} kernel={s.kernel}")
+        return "\n".join(lines)
+
+
+# ------------------------------------------------------------------ plan cache
+class PlanCache:
+    """Memoize plans by (graph hash, config fingerprint).
+
+    In-memory by default; pass ``directory`` to persist artifacts as JSON so
+    later processes (e.g. the serving launcher) skip planning entirely.
+    """
+
+    def __init__(self, directory: str | pathlib.Path | None = None):
+        self._mem: Dict[Tuple[str, str], ExecutionPlan] = {}
+        self._dir = pathlib.Path(directory) if directory else None
+        if self._dir:
+            self._dir.mkdir(parents=True, exist_ok=True)
+
+    def _path(self, key: Tuple[str, str]) -> Optional[pathlib.Path]:
+        if not self._dir:
+            return None
+        return self._dir / f"plan-{key[0][:16]}-{key[1][:16]}.json"
+
+    def get(self, graph_hash: str, cfg_key: str) -> Optional[ExecutionPlan]:
+        key = (graph_hash, cfg_key)
+        if key in self._mem:
+            return self._mem[key]
+        p = self._path(key)
+        if p and p.exists():
+            plan = ExecutionPlan.load(p)
+            self._mem[key] = plan
+            return plan
+        return None
+
+    def put(self, plan: ExecutionPlan) -> None:
+        key = (plan.graph_hash, plan.config_key)
+        self._mem[key] = plan
+        p = self._path(key)
+        if p:
+            plan.save(p)
+
+    def get_or_plan(self, graph, cfg: EvalConfig, planner_fn,
+                    extra_key: str = "") -> ExecutionPlan:
+        """Return the cached plan for (graph, cfg) or compute via planner_fn."""
+        ck = config_key(cfg, extra_key)
+        hit = self.get(graph.graph_hash(), ck)
+        if hit is not None:
+            return hit
+        plan = planner_fn(graph, cfg)
+        self.put(plan)
+        return plan

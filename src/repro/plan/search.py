@@ -1,0 +1,316 @@
+"""Network-level (dataflow, layout) co-search over layer-boundary layouts.
+
+The per-layer ``cosearch_layer`` optimizes each layer in isolation and
+ignores that layer L's output layout IS layer L+1's input layout.  Here the
+whole network is planned as a shortest path: the DP state is the *boundary
+layout* between consecutive layers, per-layer cost comes from
+``core.layoutloop.evaluate``, and a boundary where the layout changes is
+charged the reorder implementation that realizes the switch
+(``none`` / ``offchip`` / RAR variants / ``rir``).  With RIR the switch rides
+the producing layer's reduction (paper §II-E2) and costs only BIRRD hop
+energy; without it the planner weighs a relayout pass against living with a
+discordant (bank-conflicted) layout.
+
+Exactness: on a pure chain, keeping the best path per boundary layout is the
+exact Viterbi optimum (validated against brute-force enumeration in
+``tests/test_plan.py``).  Residual/branch skip edges couple non-adjacent
+boundaries, so the beam keeps several paths per state; the greedy path is
+always injected as a candidate, so the planned schedule never loses to
+per-layer-greedy under the same total-cost objective.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.dataflow import ConvWorkload, Dataflow, enumerate_dataflows
+from repro.core.layout import Layout, conv_layout_space
+from repro.core.layoutloop import (EvalConfig, Metrics, evaluate,
+                                   reorder_overhead)
+
+from .graph import LayerGraph
+from .plan import (RIR_BLOCK, ExecutionPlan, PlanStep, config_key,
+                   layout_block_perm)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannerOptions:
+    """Knobs for the network planner.
+
+    ``objective`` must be additive over layers for the DP to be exact:
+    ``cycles`` | ``energy`` | ``edp_sum`` (sum of per-layer EDP).
+    ``switch_modes`` are the reorder implementations the hardware offers for
+    a layout-changing boundary; ``residual_mode`` relayouts a skip tensor
+    whose producing boundary disagrees with its consuming boundary (RIR can
+    only write ONE layout per tensor, so skips fall back to a copy pass).
+    """
+
+    objective: str = "cycles"
+    switch_modes: Tuple[str, ...] = ("rir",)
+    residual_mode: str = "offchip"
+    beam_width: int = 64
+    layouts: Optional[Tuple[Layout, ...]] = None
+    dataflows: Optional[Tuple[Dataflow, ...]] = None   # None = enumerate/layer
+    max_spatial_dims: int = 2
+    # dims eligible for spatial unrolling; drop "M" to model accelerators whose
+    # weight-port bandwidth can't feed pure output-channel parallelism (the
+    # paper's D1/D2 mappings always co-parallelize an input dim)
+    parallel_dims: Tuple[str, ...] = ("M", "C", "P", "Q")
+
+    def key(self) -> str:
+        return repr(self)
+
+
+def _metric_key(m: Metrics, objective: str) -> float:
+    if objective == "cycles":
+        return m.cycles
+    if objective == "energy":
+        return m.energy_pj
+    if objective == "edp_sum":
+        return m.edp
+    raise ValueError(f"objective {objective!r} is not additive")
+
+
+def _overhead_key(cycles: float, energy: float, objective: str) -> float:
+    if objective == "cycles":
+        return cycles
+    if objective == "energy":
+        return energy
+    return energy * cycles  # edp_sum: standalone pass EDP
+
+
+@dataclasses.dataclass
+class _StepChoice:
+    """Best execution of one layer given (input layout, output layout)."""
+
+    dataflow: Dataflow
+    metrics: Metrics
+    mode: str
+    key: float
+
+
+@dataclasses.dataclass
+class _Path:
+    key: float
+    cycles: float
+    energy_pj: float
+    transition_cycles: float
+    boundaries: Tuple[str, ...]            # layout names, len = layer_idx + 1
+    choices: Tuple[_StepChoice, ...]
+
+
+class NetworkPlanner:
+    """Shared machinery for DP / greedy / brute-force planning (memoized)."""
+
+    def __init__(self, graph: LayerGraph, cfg: EvalConfig,
+                 opts: PlannerOptions = PlannerOptions()):
+        self.graph = graph
+        self.cfg = cfg
+        self.opts = opts
+        self.layouts: Tuple[Layout, ...] = tuple(
+            opts.layouts if opts.layouts is not None else conv_layout_space())
+        self._by_name: Dict[str, Layout] = {l.name(): l for l in self.layouts}
+        pes = cfg.nest.aw * cfg.nest.ah
+        if opts.dataflows is not None:
+            self._dfs = {i: tuple(opts.dataflows)
+                         for i in range(len(graph))}
+        else:
+            self._dfs = {i: tuple(enumerate_dataflows(
+                wl, pes, max_dims=opts.max_spatial_dims,
+                parallel_dims=opts.parallel_dims))
+                for i, wl in enumerate(graph.layers)}
+        self._layer_memo: Dict[Tuple[int, str, str],
+                               Tuple[float, Dataflow, Metrics]] = {}
+        self._skip_memo: Dict[int, Tuple[float, float]] = {}
+
+    # ---------------------------------------------------------------- layer cost
+    def layer_cost(self, i: int, layout: Layout, mode: str
+                   ) -> Tuple[float, Dataflow, Metrics]:
+        """Min-cost dataflow for layer i reading ``layout``, reorder ``mode``."""
+        memo_key = (i, layout.name(), mode)
+        hit = self._layer_memo.get(memo_key)
+        if hit is not None:
+            return hit
+        wl = self.graph.layers[i]
+        best: Optional[Tuple[float, Dataflow, Metrics]] = None
+        for df in self._dfs[i]:
+            m = evaluate(wl, df, layout, self.cfg, reorder=mode)
+            k = _metric_key(m, self.opts.objective)
+            if best is None or k < best[0]:
+                best = (k, df, m)
+        assert best is not None, f"no dataflow candidates for layer {i}"
+        self._layer_memo[memo_key] = best
+        return best
+
+    def step_choice(self, i: int, l_in: Layout, l_out: Layout) -> _StepChoice:
+        """Best (dataflow, reorder mode) for layer i given both boundaries.
+
+        Identity boundaries may still engage the reorder unit (its read-side
+        conflict relief can beat the hop energy); changing boundaries must.
+        """
+        same = l_in.name() == l_out.name()
+        modes = (("none",) + self.opts.switch_modes) if same \
+            else self.opts.switch_modes
+        best: Optional[_StepChoice] = None
+        for mode in modes:
+            k, df, m = self.layer_cost(i, l_in, mode)
+            if best is None or k < best.key:
+                best = _StepChoice(dataflow=df, metrics=m, mode=mode, key=k)
+        assert best is not None
+        return best
+
+    def skip_penalty(self, src: int) -> Tuple[float, float]:
+        """(cycles, energy) to relayout layer ``src``'s skip tensor."""
+        hit = self._skip_memo.get(src)
+        if hit is None:
+            ro = reorder_overhead(self.graph.layers[src], self.cfg,
+                                  self.opts.residual_mode, 0.0)
+            hit = (ro.cycles, ro.energy_pj)
+            self._skip_memo[src] = hit
+        return hit
+
+    # ------------------------------------------------------------ path scoring
+    def extend(self, path: _Path, layer: int, l_out: Layout) -> _Path:
+        """Append layer ``layer`` with output boundary ``l_out``."""
+        l_in = self._by_name[path.boundaries[-1]]
+        c = self.step_choice(layer, l_in, l_out)
+        key = path.key + c.key
+        cycles = path.cycles + c.metrics.cycles
+        energy = path.energy_pj + c.metrics.energy_pj
+        trans = path.transition_cycles + c.metrics.reorder_cycles
+        for src in self.graph.skips_into(layer):
+            # boundary index src+1 carries layers[src]'s output; the skip
+            # tensor is re-read at this layer's input boundary
+            if path.boundaries[src + 1] != path.boundaries[layer]:
+                pc, pe = self.skip_penalty(src)
+                key += _overhead_key(pc, pe, self.opts.objective)
+                cycles += pc
+                energy += pe
+                trans += pc
+        return _Path(key=key, cycles=cycles, energy_pj=energy,
+                     transition_cycles=trans,
+                     boundaries=path.boundaries + (l_out.name(),),
+                     choices=path.choices + (c,))
+
+    def score_boundaries(self, boundaries: Sequence[str]) -> _Path:
+        """Score a full boundary-layout assignment (len = n_layers + 1)."""
+        assert len(boundaries) == len(self.graph) + 1
+        path = _Path(0.0, 0.0, 0.0, 0.0, (boundaries[0],), ())
+        for i, b in enumerate(boundaries[1:]):
+            path = self.extend(path, i, self._by_name[b])
+        return path
+
+    # ----------------------------------------------------------------- planners
+    def plan(self) -> ExecutionPlan:
+        """Beam/Viterbi DP over boundary layouts (greedy path injected)."""
+        beams: List[_Path] = [
+            _Path(0.0, 0.0, 0.0, 0.0, (l.name(),), ()) for l in self.layouts]
+        for i in range(len(self.graph)):
+            grown = [self.extend(p, i, l_out)
+                     for p in beams for l_out in self.layouts]
+            grown.sort(key=lambda p: p.key)
+            kept: List[_Path] = []
+            seen_last: Dict[str, int] = {}
+            # keep the best few per terminal state, best-first overall
+            per_state = max(1, self.opts.beam_width // len(self.layouts))
+            for p in grown:
+                last = p.boundaries[-1]
+                if seen_last.get(last, 0) >= per_state:
+                    continue
+                seen_last[last] = seen_last.get(last, 0) + 1
+                kept.append(p)
+                if len(kept) >= self.opts.beam_width:
+                    break
+            beams = kept
+        best = min(beams, key=lambda p: p.key)
+        greedy = self._greedy_path()
+        if greedy.key < best.key:
+            best = greedy
+        return self._to_plan(best, "network-dp")
+
+    def _greedy_boundaries(self) -> List[str]:
+        """Each layer picks its locally-best input layout, boundary costs be
+        damned — the baseline FEATHER's per-layer co-switching implies."""
+        picks: List[str] = []
+        for i in range(len(self.graph)):
+            best_k, best_l = None, None
+            for lay in self.layouts:
+                for mode in ("none",) + self.opts.switch_modes:
+                    k, _, _ = self.layer_cost(i, lay, mode)
+                    if best_k is None or k < best_k:
+                        best_k, best_l = k, lay.name()
+            picks.append(best_l)
+        return picks + [picks[-1]]   # keep the last boundary where it landed
+
+    def _greedy_path(self) -> _Path:
+        return self.score_boundaries(self._greedy_boundaries())
+
+    def greedy(self) -> ExecutionPlan:
+        return self._to_plan(self._greedy_path(), "greedy")
+
+    def brute_force(self) -> ExecutionPlan:
+        """Exhaustive enumeration of boundary assignments (tests/small nets)."""
+        names = [l.name() for l in self.layouts]
+        best: Optional[_Path] = None
+        for combo in itertools.product(names, repeat=len(self.graph) + 1):
+            p = self.score_boundaries(combo)
+            if best is None or p.key < best.key:
+                best = p
+        assert best is not None
+        return self._to_plan(best, "brute-force")
+
+    def fixed(self, layout: Layout) -> ExecutionPlan:
+        """No switching: one layout at every boundary (the baseline layout
+        need not be part of the search space)."""
+        self._by_name.setdefault(layout.name(), layout)
+        names = [layout.name()] * (len(self.graph) + 1)
+        return self._to_plan(self.score_boundaries(names), "fixed")
+
+    # ------------------------------------------------------------- plan emission
+    def _to_plan(self, path: _Path, planner: str) -> ExecutionPlan:
+        steps = []
+        for i, (wl, choice) in enumerate(zip(self.graph.layers, path.choices)):
+            l_in, l_out = path.boundaries[i], path.boundaries[i + 1]
+            gemm_like = wl.R == 1 and wl.S == 1 and wl.stride == 1
+            n_blocks = wl.M // RIR_BLOCK if wl.M % RIR_BLOCK == 0 else 0
+            if gemm_like and n_blocks >= 1:
+                kernel = "rir_matmul"
+                perm = layout_block_perm(l_out, n_blocks)
+            else:
+                kernel = "ref"
+                perm = None
+            steps.append(PlanStep(
+                layer=wl.name, workload=wl, dataflow=choice.dataflow,
+                in_layout=l_in, out_layout=l_out, reorder=choice.mode,
+                kernel=kernel, epilogue_perm=perm,
+                cycles=choice.metrics.cycles,
+                energy_pj=choice.metrics.energy_pj))
+        return ExecutionPlan(
+            graph_name=self.graph.name, graph_hash=self.graph.graph_hash(),
+            config_key=config_key(self.cfg, self.opts.key()),
+            objective=self.opts.objective, planner=planner,
+            steps=tuple(steps), total_cycles=path.cycles,
+            total_energy_pj=path.energy_pj,
+            transition_cycles=path.transition_cycles)
+
+
+# ------------------------------------------------------------- module-level API
+def plan_network(graph: LayerGraph, cfg: EvalConfig,
+                 opts: PlannerOptions = PlannerOptions()) -> ExecutionPlan:
+    return NetworkPlanner(graph, cfg, opts).plan()
+
+
+def greedy_plan(graph: LayerGraph, cfg: EvalConfig,
+                opts: PlannerOptions = PlannerOptions()) -> ExecutionPlan:
+    return NetworkPlanner(graph, cfg, opts).greedy()
+
+
+def brute_force_plan(graph: LayerGraph, cfg: EvalConfig,
+                     opts: PlannerOptions = PlannerOptions()) -> ExecutionPlan:
+    return NetworkPlanner(graph, cfg, opts).brute_force()
+
+
+def fixed_plan(graph: LayerGraph, cfg: EvalConfig, layout: Layout,
+               opts: PlannerOptions = PlannerOptions()) -> ExecutionPlan:
+    return NetworkPlanner(graph, cfg, opts).fixed(layout)

@@ -1,6 +1,9 @@
 """BIRRD topology / routing / simulation properties (paper §III-B, Alg. 1)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.birrd import (ADD_LEFT, ADD_RIGHT, PASS, SWAP, Birrd,

@@ -49,8 +49,8 @@ def test_train_step_multidevice_coswitch_vs_fixed():
         from repro.models import build_model
         from repro.distributed.stepfn import make_train_step
         from repro.optim import adamw_init
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(model_axis=4)
         cfg = get_config("llama3p2_3b", smoke=True)
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
@@ -77,8 +77,8 @@ def test_moe_ep_matches_local_dispatch():
         from repro.configs import get_config
         from repro.models import build_model
         import dataclasses
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(model_axis=4)
         cfg = get_config("dbrx_132b", smoke=True)
         # make shapes EP-friendly on the tiny mesh: E=4 % 4 == 0; T % 4 == 0
         model = build_model(cfg)
@@ -105,8 +105,8 @@ def test_serve_step_multidevice():
         from repro.models import build_model
         from repro.distributed.stepfn import jit_serve_step, jit_prefill
         from repro.distributed.sharding import cache_shardings
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(model_axis=4)
         cfg = get_config("llama3p2_3b", smoke=True)
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))

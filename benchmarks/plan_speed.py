@@ -1,0 +1,108 @@
+"""Plan-speed benchmark — the batched lattice engine's perf trajectory.
+
+Times (1) ``evaluate_lattice`` against the equivalent scalar ``evaluate``
+sweep on one layer's full (dataflow x layout x mode) lattice and (2)
+end-to-end ``NetworkPlanner.plan()`` on MobileNet-V3 / ResNet-50 through the
+table-driven path vs the pre-refactor scalar path, asserting the two paths
+emit byte-identical plan artifacts.
+
+Results are appended to ``BENCH_plan_speed.json`` at the repo root so later
+PRs can see the trajectory, not just the latest number.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+from repro.core.dataflow import enumerate_dataflows
+from repro.core.layout import conv_layout_space
+from repro.core.layoutloop import EvalConfig, evaluate, evaluate_lattice
+from repro.core.workloads import mobilenet_v3_layers
+from repro.plan import NetworkPlanner, PlannerOptions, mobilenet_v3_graph, \
+    resnet50_graph
+
+from .common import emit
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_plan_speed.json"
+MODES = ("none", "rir", "offchip")
+PLANNER_OPTS = PlannerOptions(switch_modes=("rir", "offchip"),
+                              parallel_dims=("C", "P", "Q"))
+
+
+def bench_layer_sweep(cfg: EvalConfig) -> dict:
+    """One layer's full lattice: scalar triple loop vs one batched pass."""
+    wl = mobilenet_v3_layers()[0]
+    dfs = list(enumerate_dataflows(wl, cfg.nest.aw * cfg.nest.ah,
+                                   parallel_dims=("C", "P", "Q")))
+    layouts = conv_layout_space()
+    t0 = time.perf_counter()
+    scalar = [evaluate(wl, df, lay, cfg, reorder=mode)
+              for lay in layouts for df in dfs for mode in MODES]
+    t_scalar = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    lat = evaluate_lattice(wl, dfs, layouts, MODES, cfg)
+    t_lattice = time.perf_counter() - t0
+    assert lat.shape == (len(dfs), len(layouts), len(MODES))
+    return {"layer": wl.name, "points": len(scalar),
+            "scalar_s": t_scalar, "lattice_s": t_lattice,
+            "speedup": t_scalar / t_lattice}
+
+
+def bench_plan(graph, cfg: EvalConfig) -> dict:
+    """End-to-end network planning, table-driven vs scalar path."""
+    t0 = time.perf_counter()
+    fast = NetworkPlanner(graph, cfg, PLANNER_OPTS).plan()
+    t_lattice = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    slow = NetworkPlanner(graph, cfg, PLANNER_OPTS, use_lattice=False).plan()
+    t_scalar = time.perf_counter() - t0
+    assert fast.to_json() == slow.to_json(), \
+        f"lattice/scalar plan mismatch on {graph.name}"
+    return {"layers": len(graph), "scalar_s": t_scalar,
+            "lattice_s": t_lattice, "speedup": t_scalar / t_lattice,
+            "identical_json": True, "total_cycles": fast.total_cycles}
+
+
+def run() -> dict:
+    cfg = EvalConfig()
+    entry = {
+        "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "note": "scalar_s shares this process's warmed per-(wl, df) sample "
+                "tables; the cold pre-refactor mobilenet_v3 baseline was ~14s",
+        "switch_modes": list(PLANNER_OPTS.switch_modes),
+        "layer_sweep": bench_layer_sweep(cfg),
+        "plan": {
+            "mobilenet_v3": bench_plan(mobilenet_v3_graph(), cfg),
+            "resnet50": bench_plan(resnet50_graph(), cfg),
+        },
+    }
+    return entry
+
+
+def save(entry: dict) -> None:
+    history = []
+    if BENCH_PATH.exists():
+        history = json.loads(BENCH_PATH.read_text()).get("entries", [])
+    history.append(entry)
+    BENCH_PATH.write_text(json.dumps(
+        {"benchmark": "plan_speed", "entries": history}, indent=2) + "\n")
+
+
+def main() -> dict:
+    entry = run()
+    save(entry)
+    rows = [("plan_speed.layer_sweep", entry["layer_sweep"]["lattice_s"] * 1e6,
+             f"us;points={entry['layer_sweep']['points']};"
+             f"speedup_vs_scalar={entry['layer_sweep']['speedup']:.1f}x")]
+    for net, r in entry["plan"].items():
+        rows.append((f"plan_speed.{net}", r["lattice_s"] * 1e6,
+                     f"us;scalar_s={r['scalar_s']:.2f};"
+                     f"speedup_vs_scalar={r['speedup']:.1f}x"))
+    emit(rows)
+    return entry
+
+
+if __name__ == "__main__":
+    main()

@@ -1,20 +1,22 @@
 """FEATHER core: dataflow/layout co-switching, BIRRD, RIR, Layoutloop."""
 from .birrd import Birrd, BirrdTopology, birrd_cost, fan_cost, art_cost
-from .conflicts import ConflictReport, assess_iact_conflicts, concordant
+from .conflicts import ConflictReport, assess_iact_conflicts, \
+    assess_iact_conflicts_grid, concordant
 from .dataflow import ConvWorkload, Dataflow, enumerate_dataflows
 from .layout import Buffer, Layout, conv_layout_space, gemm_layout_space
-from .layoutloop import EvalConfig, Metrics, SearchResult, cosearch_layer, \
-    evaluate, network_eval
+from .layoutloop import EvalConfig, LatticeMetrics, Metrics, SearchResult, \
+    cosearch_layer, evaluate, evaluate_lattice, network_eval
 from .nest import NestConfig, nest_cycles, nest_walkthrough, systolic_cycles
 from .rir import make_group_ids, rir_layout_write, rir_reduce_reorder
 
 __all__ = [
     "Birrd", "BirrdTopology", "birrd_cost", "fan_cost", "art_cost",
-    "ConflictReport", "assess_iact_conflicts", "concordant",
+    "ConflictReport", "assess_iact_conflicts", "assess_iact_conflicts_grid",
+    "concordant",
     "ConvWorkload", "Dataflow", "enumerate_dataflows",
     "Buffer", "Layout", "conv_layout_space", "gemm_layout_space",
-    "EvalConfig", "Metrics", "SearchResult", "cosearch_layer", "evaluate",
-    "network_eval",
+    "EvalConfig", "LatticeMetrics", "Metrics", "SearchResult",
+    "cosearch_layer", "evaluate", "evaluate_lattice", "network_eval",
     "NestConfig", "nest_cycles", "nest_walkthrough", "systolic_cycles",
     "make_group_ids", "rir_layout_write", "rir_reduce_reorder",
 ]

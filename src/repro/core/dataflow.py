@@ -11,6 +11,7 @@ A dataflow is a transformed loop nest over the 7 convolution dims
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import math
 from typing import Dict, Iterator, Mapping, Sequence, Tuple
@@ -126,6 +127,16 @@ class Dataflow:
                 pt[d] = pt.get(d, 0) + v
             yield pt
 
+    def sample_table(self, wl: ConvWorkload, max_samples: int = 16
+                     ) -> Tuple[Dict[str, int], ...]:
+        """Materialized ``temporal_samples``, memoized per ``(wl, df)``.
+
+        The sample bases depend only on the workload and the dataflow — NOT
+        on the layout or reorder mode — so every (layout, mode) candidate in
+        a lattice sweep shares one table.  Callers must not mutate the dicts.
+        """
+        return _sample_table(self, wl, max_samples)
+
     def temporal_samples(self, wl: ConvWorkload, max_samples: int = 16
                          ) -> Iterator[Dict[str, int]]:
         """Sample temporal base points (tile origins) for conflict averaging."""
@@ -152,6 +163,12 @@ class Dataflow:
                 break
             if not inner:
                 break
+
+
+@functools.lru_cache(maxsize=4096)
+def _sample_table(df: "Dataflow", wl: ConvWorkload, max_samples: int
+                  ) -> Tuple[Dict[str, int], ...]:
+    return tuple(df.temporal_samples(wl, max_samples))
 
 
 def enumerate_dataflows(wl: ConvWorkload, num_pes: int,

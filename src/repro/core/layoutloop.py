@@ -6,6 +6,19 @@ Extends the Timeloop-style analytical model with:
   (3) layout-aware energy        (line-level access counting),
   (4) reordering implementations (none / off-chip / RAR variants / RIR),
   (5) (dataflow, layout) co-search minimizing EDP per layer.
+
+Two evaluation paths produce bit-identical numbers:
+
+* ``evaluate``          — one (dataflow, layout, mode) point; the scalar
+  oracle, kept deliberately simple.
+* ``evaluate_lattice``  — the full (dataflow x layout x mode) candidate
+  lattice in a handful of vectorized numpy passes: conflict statistics come
+  from ``conflicts.assess_iact_conflicts_grid`` (temporal samples shared per
+  dataflow, one relief evaluation shared by every mode that maps to it) and
+  the nest timing / reorder overhead / energy rollup are array expressions
+  over the whole lattice.  ``cosearch_layer`` / ``network_eval`` and the
+  network planner reduce over the resulting ``LatticeMetrics`` table instead
+  of looping scalar ``evaluate`` calls.
 """
 from __future__ import annotations
 
@@ -13,11 +26,20 @@ import dataclasses
 import math
 from typing import Iterable, List, Optional, Sequence, Tuple
 
-from .conflicts import assess_iact_conflicts
+import numpy as np
+
+from .conflicts import assess_iact_conflicts, assess_iact_conflicts_grid
 from .dataflow import ConvWorkload, Dataflow, enumerate_dataflows
 from .energy import DEFAULT_ENERGY, EnergyModel
 from .layout import Buffer, Layout, conv_layout_space
-from .nest import NestConfig, nest_cycles
+from .nest import NestConfig, nest_cycle_terms, nest_cycles
+
+# Read-side conflict relief each reorder implementation provides (paper
+# Fig. 5); modes sharing a relief share one conflict assessment in the
+# lattice path.
+READ_RELIEF = {"none": "none", "offchip": "none",
+               "line_rotation": "line_rotation", "transpose": "transpose",
+               "row_reorder": "none", "rir": "arbitrary"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,9 +135,9 @@ def evaluate(wl: ConvWorkload, df: Dataflow, layout: Layout,
     """
     e = cfg.energy
     mode = cfg.reorder if reorder is None else reorder
-    read_relief = {"none": "none", "offchip": "none", "line_rotation":
-                   "line_rotation", "transpose": "transpose",
-                   "row_reorder": "none", "rir": "arbitrary"}[mode]
+    read_relief = READ_RELIEF.get(mode)
+    if read_relief is None:
+        raise ValueError(f"unknown reorder mode {mode!r}")
     rep = assess_iact_conflicts(wl, df, layout, cfg.buffer, reorder=read_relief)
     timing = nest_cycles(cfg.nest, wl, df, slowdown=rep.slowdown)
     compute_cycles = timing.total_cycles
@@ -153,6 +175,155 @@ def evaluate(wl: ConvWorkload, df: Dataflow, layout: Layout,
                    pj_per_mac=energy / max(wl.macs(), 1))
 
 
+# ------------------------------------------------------------ batched lattice
+@dataclasses.dataclass(frozen=True)
+class LatticeMetrics:
+    """Dense per-layer cost table over a (dataflow x layout x mode) lattice.
+
+    Every array is indexed ``[dataflow, layout, mode]``; ``metrics`` slices
+    one lattice point back to a ``Metrics`` bit-identical to the scalar
+    ``evaluate`` call it replaces (asserted field-by-field in
+    ``tests/test_lattice.py``).
+    """
+
+    workload: ConvWorkload
+    dataflows: Tuple[Dataflow, ...]
+    layouts: Tuple[Layout, ...]
+    modes: Tuple[str, ...]
+    cycles: "np.ndarray"
+    compute_cycles: "np.ndarray"
+    reorder_cycles: "np.ndarray"
+    slowdown: "np.ndarray"
+    utilization: "np.ndarray"
+    energy_pj: "np.ndarray"
+    dram_bytes: "np.ndarray"
+    line_reads: "np.ndarray"
+    pj_per_mac: "np.ndarray"
+
+    @property
+    def shape(self) -> Tuple[int, int, int]:
+        return (len(self.dataflows), len(self.layouts), len(self.modes))
+
+    def key(self, objective: str) -> "np.ndarray":
+        """Per-point cost under an additive objective (the planner's axes)."""
+        if objective == "cycles":
+            return self.cycles
+        if objective == "energy":
+            return self.energy_pj
+        if objective in ("edp", "edp_sum"):
+            return self.energy_pj * self.cycles
+        raise ValueError(f"objective {objective!r} is not additive")
+
+    def metrics(self, d: int, l: int, m: int) -> Metrics:
+        idx = (d, l, m)
+        return Metrics(
+            cycles=float(self.cycles[idx]),
+            compute_cycles=float(self.compute_cycles[idx]),
+            reorder_cycles=float(self.reorder_cycles[idx]),
+            slowdown=float(self.slowdown[idx]),
+            utilization=float(self.utilization[idx]),
+            energy_pj=float(self.energy_pj[idx]),
+            dram_bytes=float(self.dram_bytes[idx]),
+            line_reads=float(self.line_reads[idx]),
+            pj_per_mac=float(self.pj_per_mac[idx]))
+
+
+def evaluate_lattice(wl: ConvWorkload, dataflows: Sequence[Dataflow],
+                     layouts: Sequence[Layout], modes: Sequence[str],
+                     cfg: EvalConfig) -> LatticeMetrics:
+    """Evaluate the full candidate lattice in vectorized numpy passes.
+
+    Replaces ``len(dataflows) * len(layouts) * len(modes)`` scalar
+    ``evaluate`` calls: temporal samples are derived once per dataflow,
+    conflict statistics once per (dataflow, layout, *relief*) — every mode
+    mapping to the same read-side relief shares them — and the nest timing,
+    reorder overhead and energy rollup are single array expressions over the
+    whole lattice, written to mirror the scalar path's float operations
+    exactly.
+    """
+    dataflows = tuple(dataflows)
+    layouts = tuple(layouts)
+    modes = tuple(modes)
+    for mode in modes:
+        if mode not in READ_RELIEF:
+            raise ValueError(f"unknown reorder mode {mode!r}")
+    e = cfg.energy
+    nd, nl, nm = len(dataflows), len(layouts), len(modes)
+    reliefs = tuple(dict.fromkeys(READ_RELIEF[m] for m in modes))
+
+    slowdown = np.ones((nd, nl, nm))
+    avg_lines = np.zeros((nd, nl, nm))
+    for di, df in enumerate(dataflows):
+        grid = assess_iact_conflicts_grid(wl, df, layouts, cfg.buffer, reliefs)
+        for mi, mode in enumerate(modes):
+            reps = grid[READ_RELIEF[mode]]
+            for li in range(nl):
+                slowdown[di, li, mi] = reps[li].slowdown
+                avg_lines[di, li, mi] = reps[li].avg_lines_per_cycle
+
+    # nest timing (``nest_cycles`` in array form over the slowdown axis)
+    macs = wl.macs()
+    terms = [nest_cycle_terms(cfg.nest, wl, df) for df in dataflows]
+    steady = np.array([t[0] for t in terms])                   # (D,)
+    util_theo = np.array([t[3] for t in terms])
+    fill = cfg.nest.ah
+    load = cfg.nest.ah ** 2
+    compute = (steady[:, None, None] + fill) * slowdown + load
+    util = util_theo[:, None, None] / slowdown
+
+    iact_words = math.prod(wl.iact_dims().values())
+    w_words = math.prod(wl.weight_dims().values())
+    oact_words = math.prod(wl.oact_dims().values())
+    tensor_bytes = (iact_words + w_words + oact_words) * cfg.dtype_bytes
+    oact_lines = max(1.0, oact_words / cfg.buffer.line_size)
+
+    active = np.maximum(1.0, compute - load)
+    line_reads = avg_lines * active                            # iActs
+    line_reads = line_reads + active                           # StrB stream
+
+    # ``reorder_overhead`` per mode: only the off-chip overlap term varies
+    # across the lattice, everything else is the standalone-pass constant
+    ro_cycles = np.zeros((nd, nl, nm))
+    ro_energy = np.zeros(nm)
+    ro_dram = np.zeros(nm)
+    ro_reads = np.zeros(nm)
+    ro_writes = np.zeros(nm)
+    for mi, mode in enumerate(modes):
+        ro = reorder_overhead(wl, cfg, mode, 0.0)
+        ro_energy[mi] = ro.energy_pj
+        ro_dram[mi] = ro.dram_bytes
+        ro_reads[mi] = ro.line_reads
+        ro_writes[mi] = ro.line_writes
+        if mode == "offchip":
+            # ro.cycles at compute_cycles=0.0 IS the full round-trip latency;
+            # expose only the part the lattice point's compute can't hide
+            ro_cycles[:, :, mi] = np.maximum(
+                0.0, ro.cycles - 0.9 * compute[:, :, mi])
+        else:
+            ro_cycles[:, :, mi] = ro.cycles
+
+    line_reads = line_reads + ro_reads[None, None, :]
+    line_writes = np.broadcast_to((oact_lines + ro_writes)[None, None, :],
+                                  (nd, nl, nm))
+    dram_bytes = np.broadcast_to((float(tensor_bytes) + ro_dram)[None, None, :],
+                                 (nd, nl, nm))
+
+    energy = (
+        macs * (e.mac_pj + 2 * e.reg_access_pj)
+        + line_reads * e.sram_line_read_pj
+        + line_writes * e.sram_line_write_pj
+        + e.dram_bytes_pj(tensor_bytes)
+        + ro_energy[None, None, :]
+    )
+    cycles = compute + ro_cycles
+    return LatticeMetrics(
+        workload=wl, dataflows=dataflows, layouts=layouts, modes=modes,
+        cycles=cycles, compute_cycles=compute, reorder_cycles=ro_cycles,
+        slowdown=slowdown, utilization=util, energy_pj=energy,
+        dram_bytes=dram_bytes, line_reads=line_reads,
+        pj_per_mac=energy / max(macs, 1))
+
+
 @dataclasses.dataclass(frozen=True)
 class SearchResult:
     workload: ConvWorkload
@@ -166,22 +337,20 @@ def cosearch_layer(wl: ConvWorkload, cfg: EvalConfig,
                    dataflows: Optional[Iterable[Dataflow]] = None,
                    layout_fixed: Optional[Layout] = None,
                    objective: str = "edp") -> SearchResult:
-    """Exhaustive layout x pruned dataflow co-search for one layer (paper §VI-A2)."""
+    """Exhaustive layout x pruned dataflow co-search for one layer (paper §VI-A2).
+
+    One ``evaluate_lattice`` pass + an argmin; the flatten order (layouts
+    outer, dataflows inner) preserves the scalar loop's first-wins tie-break.
+    """
     layouts = [layout_fixed] if layout_fixed is not None else \
         list(layouts or conv_layout_space())
     pes = cfg.nest.aw * cfg.nest.ah
     dfs = list(dataflows) if dataflows is not None else \
         list(enumerate_dataflows(wl, pes))
-    best: Optional[SearchResult] = None
-    for lay in layouts:
-        for df in dfs:
-            m = evaluate(wl, df, lay, cfg)
-            key = m.edp if objective == "edp" else m.cycles
-            if best is None or key < (best.metrics.edp if objective == "edp"
-                                      else best.metrics.cycles):
-                best = SearchResult(wl, df, lay, m)
-    assert best is not None
-    return best
+    lat = evaluate_lattice(wl, dfs, layouts, (cfg.reorder,), cfg)
+    key = lat.key("edp" if objective == "edp" else "cycles")[:, :, 0]
+    li, di = divmod(int(np.argmin(key.T.reshape(-1))), len(dfs))
+    return SearchResult(wl, dfs[di], layouts[li], lat.metrics(di, li, 0))
 
 
 def network_eval(layers: Sequence[ConvWorkload], cfg: EvalConfig,
@@ -192,9 +361,25 @@ def network_eval(layers: Sequence[ConvWorkload], cfg: EvalConfig,
     if per_layer_layout:
         return [cosearch_layer(l, cfg, **kw) for l in layers]
     layouts = list(kw.pop("layouts", conv_layout_space()))
+    objective = kw.pop("objective", "edp")
+    dataflows = kw.pop("dataflows", None)
+    if kw:
+        raise TypeError(f"unexpected network_eval options {sorted(kw)}")
+    # one lattice per layer over every layout, then a per-layout reduction
+    pes = cfg.nest.aw * cfg.nest.ah
+    per_layer: List[Tuple[List[Dataflow], LatticeMetrics]] = []
+    for wl in layers:
+        dfs = list(dataflows) if dataflows is not None else \
+            list(enumerate_dataflows(wl, pes))
+        per_layer.append((dfs, evaluate_lattice(wl, dfs, layouts,
+                                                (cfg.reorder,), cfg)))
     best_total, best_results = None, None
-    for lay in layouts:
-        res = [cosearch_layer(l, cfg, layout_fixed=lay, **kw) for l in layers]
+    for li, lay in enumerate(layouts):
+        res = []
+        for wl, (dfs, lat) in zip(layers, per_layer):
+            keys = lat.key("edp" if objective == "edp" else "cycles")[:, li, 0]
+            di = int(np.argmin(keys))
+            res.append(SearchResult(wl, dfs[di], lay, lat.metrics(di, li, 0)))
         total = sum(r.metrics.edp for r in res)
         if best_total is None or total < best_total:
             best_total, best_results = total, res

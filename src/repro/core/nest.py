@@ -34,16 +34,25 @@ class NestTiming:
     pipeline_fill_cycles: int
 
 
-def nest_cycles(cfg: NestConfig, wl: ConvWorkload, df: Dataflow,
-                slowdown: float = 1.0) -> NestTiming:
-    """Cycle model: total MACs over effective MAC/s, stretched by bank-conflict
-    slowdown; weight loads are hidden except the first (paper Fig. 9)."""
+def nest_cycle_terms(cfg: NestConfig, wl: ConvWorkload, df: Dataflow
+                     ) -> Tuple[float, int, int, float]:
+    """(steady, fill, load, utilization) — the slowdown-independent pieces of
+    the cycle model, shared by ``nest_cycles`` and the batched lattice path
+    (``layoutloop.evaluate_lattice``) so the formula lives in one place."""
     pes = cfg.aw * cfg.ah
     util = df.theoretical_utilization(wl, pes)
     macs = wl.macs()
     steady = macs / max(pes * util, 1e-9)
     fill = cfg.ah  # rows drain one by one into BIRRD
     load = cfg.ah ** 2
+    return steady, fill, load, util
+
+
+def nest_cycles(cfg: NestConfig, wl: ConvWorkload, df: Dataflow,
+                slowdown: float = 1.0) -> NestTiming:
+    """Cycle model: total MACs over effective MAC/s, stretched by bank-conflict
+    slowdown; weight loads are hidden except the first (paper Fig. 9)."""
+    steady, fill, load, util = nest_cycle_terms(cfg, wl, df)
     total = (steady + fill) * slowdown + load
     return NestTiming(total_cycles=total, steady_utilization=util,
                       weight_load_cycles=load, pipeline_fill_cycles=fill)

@@ -29,10 +29,28 @@ from ._compat import CompilerParams
 from repro.core.birrd import ADD_LEFT, ADD_RIGHT, PASS, SWAP, Birrd
 
 
+@functools.lru_cache(maxsize=64)
+def _birrd(aw: int) -> Birrd:
+    """One shared (stateless-after-init) network model per width."""
+    return Birrd(aw)
+
+
 def compile_switch_program(aw: int, configs: Sequence[Sequence[int]]
                            ) -> np.ndarray:
-    """Lower per-stage Egg configs to stacked stage matrices (S, aw, aw)."""
-    net = Birrd(aw)
+    """Lower per-stage Egg configs to stacked stage matrices (S, aw, aw).
+
+    Memoized per ``(aw, configs)``: a layer's switch program is compiled
+    once and reused by every subsequent call (FEATHER reprograms the
+    Instruction Buffer per layer, not per tile).  Callers must not mutate
+    the returned array.
+    """
+    return _compile_switch_program(aw, tuple(tuple(row) for row in configs))
+
+
+@functools.lru_cache(maxsize=1024)
+def _compile_switch_program(aw: int, configs: Tuple[Tuple[int, ...], ...]
+                            ) -> np.ndarray:
+    net = _birrd(aw)
     mats = []
     for stage, row in enumerate(configs):
         alpha = np.zeros(aw, np.float32)
@@ -98,6 +116,27 @@ def birrd_apply(x: jax.Array, configs, *, block_d: int = 128,
     return birrd_apply_p(x, mats, block_d=block_d, interpret=interpret)
 
 
+@functools.lru_cache(maxsize=1024)
+def _routed_stage_mats(aw: int, group_ids: Tuple[int, ...],
+                       out_ports: Tuple[int, ...]) -> jax.Array:
+    """Route + lower + upload, memoized per reduction/reorder pattern: the
+    backtracking search, stage-matrix lowering AND the host->device transfer
+    run once per ``(aw, group_ids, out_ports)``; repeat calls are dict hits."""
+    cfg = _birrd(aw).route(list(group_ids), list(out_ports))
+    if cfg is None:
+        raise ValueError("BIRRD routing failed for the requested pattern")
+    return jnp.asarray(_compile_switch_program(aw, tuple(tuple(r)
+                                                         for r in cfg)))
+
+
+@functools.lru_cache(maxsize=1024)
+def _out_port_mask(aw: int, out_ports: Tuple[int, ...]) -> np.ndarray:
+    mask = np.zeros((aw, 1), np.bool_)
+    for p in out_ports:
+        mask[int(p)] = True
+    return mask
+
+
 def birrd_reduce(x: jax.Array, group_ids: Sequence[int],
                  out_ports: Sequence[int], *, block_d: int = 128,
                  interpret: bool = True) -> jax.Array:
@@ -108,13 +147,8 @@ def birrd_reduce(x: jax.Array, group_ids: Sequence[int],
     does in hardware).
     """
     aw = x.shape[0]
-    net = Birrd(aw)
-    cfg = net.route(list(group_ids), list(out_ports))
-    if cfg is None:
-        raise ValueError("BIRRD routing failed for the requested pattern")
-    y = birrd_apply(x, tuple(tuple(r) for r in cfg), block_d=block_d,
-                    interpret=interpret)
-    mask = np.zeros((aw, 1), np.bool_)
-    for p in out_ports:
-        mask[int(p)] = True
+    mats = _routed_stage_mats(aw, tuple(int(g) for g in group_ids),
+                              tuple(int(p) for p in out_ports))
+    y = birrd_apply_p(x, mats, block_d=block_d, interpret=interpret)
+    mask = _out_port_mask(aw, tuple(int(p) for p in out_ports))
     return jnp.where(jnp.asarray(mask), y, jnp.zeros_like(y))

@@ -13,8 +13,9 @@ from .plan import (ExecutionPlan, PlanCache, PlanStep, config_key,
                    layout_block_perm)
 from .search import (NetworkPlanner, PlannerOptions, brute_force_plan,
                      fixed_plan, greedy_plan, plan_network)
-from .executor import (PlanError, execute_plan, execute_plan_reference,
-                       permute_weight_blocks)
+from .executor import (PlanError, PreparedPlan, execute_plan,
+                       execute_plan_reference, permute_weight_blocks,
+                       prepare_plan)
 
 __all__ = [
     "LayerGraph", "from_layers", "resnet50_graph", "mobilenet_v3_graph",
@@ -23,6 +24,6 @@ __all__ = [
     "layout_block_perm",
     "NetworkPlanner", "PlannerOptions", "plan_network", "greedy_plan",
     "brute_force_plan", "fixed_plan",
-    "PlanError", "execute_plan", "execute_plan_reference",
-    "permute_weight_blocks",
+    "PlanError", "PreparedPlan", "prepare_plan", "execute_plan",
+    "execute_plan_reference", "permute_weight_blocks",
 ]

@@ -15,16 +15,23 @@ relayout pass ever runs between layers.  Concretely:
   stored in the incoming boundary layout — the consumer reads concordantly,
   for free.
 
+Per-boundary gather indices are memoized per ``(perm, block)``, and
+``prepare_plan`` hoists everything that depends only on ``(plan, shapes)`` —
+boundary perms, gather indices, pre-permuted weights — out of the per-call
+path, so a served plan pays the index/weight setup once, not per batch.
+
 The executor's output (returned in canonical block order) is bit-identical
 to the plain ``x @ W1 @ ... @ Wn`` chain; tests assert this against the
 ``kernels/ref.py`` oracles.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Sequence
+import functools
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops, ref
 
@@ -35,24 +42,36 @@ class PlanError(ValueError):
     """A plan is internally inconsistent or doesn't fit the given tensors."""
 
 
+@functools.lru_cache(maxsize=4096)
+def _gather_indices(perm: Tuple[int, ...], block: int) -> np.ndarray:
+    """Flat gather such that ``x[..., idx]`` stores canonical block j at slot
+    ``perm[j]`` (equivalently: prepares weights stored per ``perm``)."""
+    n = len(perm)
+    cols = np.zeros(n, np.int64)
+    cols[np.asarray(perm)] = np.arange(n)
+    return (cols[:, None] * block + np.arange(block)[None, :]).reshape(-1)
+
+
+@functools.lru_cache(maxsize=4096)
+def _scatter_indices(perm: Tuple[int, ...], block: int) -> np.ndarray:
+    """Flat gather recovering canonical order from a ``perm``-stored tensor."""
+    return (np.asarray(perm)[:, None] * block
+            + np.arange(block)[None, :]).reshape(-1)
+
+
 def apply_block_perm(x: jax.Array, perm: Sequence[int],
                      block: int = RIR_BLOCK) -> jax.Array:
     """Store canonical column-block j at slot ``perm[j]`` (RIR write order)."""
     n = len(perm)
     if n * block != x.shape[-1]:
         raise PlanError(f"perm of {n} blocks x {block} != dim {x.shape[-1]}")
-    cols = jnp.zeros(n, jnp.int32).at[jnp.asarray(perm)].set(jnp.arange(n))
-    idx = (cols[:, None] * block + jnp.arange(block)[None, :]).reshape(-1)
-    return x[..., idx]
+    return x[..., _gather_indices(tuple(perm), block)]
 
 
 def invert_block_perm(x: jax.Array, perm: Sequence[int],
                       block: int = RIR_BLOCK) -> jax.Array:
     """Recover canonical order from a ``perm``-stored tensor."""
-    n = len(perm)
-    idx = (jnp.asarray(perm)[:, None] * block
-           + jnp.arange(block)[None, :]).reshape(-1)
-    return x[..., idx]
+    return x[..., _scatter_indices(tuple(perm), block)]
 
 
 def permute_weight_blocks(w: jax.Array, in_perm: Sequence[int],
@@ -62,9 +81,7 @@ def permute_weight_blocks(w: jax.Array, in_perm: Sequence[int],
     n = len(in_perm)
     if n * block != w.shape[0]:
         raise PlanError(f"in_perm of {n} blocks x {block} != K {w.shape[0]}")
-    cols = jnp.zeros(n, jnp.int32).at[jnp.asarray(in_perm)].set(jnp.arange(n))
-    idx = (cols[:, None] * block + jnp.arange(block)[None, :]).reshape(-1)
-    return w[idx, :]
+    return w[_gather_indices(tuple(in_perm), block), :]
 
 
 def _boundary_perms(plan: ExecutionPlan, x_dim: int,
@@ -97,46 +114,94 @@ def _boundary_perms(plan: ExecutionPlan, x_dim: int,
     return perms
 
 
+class PreparedPlan:
+    """Everything ``execute_plan`` derives from ``(plan, shapes)`` alone.
+
+    Boundary perms, gather indices, and the pre-permuted (effective) weight
+    matrices are computed once here; calling the object runs only the
+    per-batch matmul chain.  Reuse one instance across ``execute_plan`` calls
+    that share the plan and weights (e.g. every serving batch).
+    """
+
+    def __init__(self, plan: ExecutionPlan, x_dim: int,
+                 weights: Sequence[jax.Array], *, block: int = RIR_BLOCK):
+        if len(weights) != len(plan.steps):
+            raise PlanError(
+                f"{len(weights)} weights for {len(plan.steps)} steps")
+        for i, w in enumerate(weights):
+            k_prev = x_dim if i == 0 else weights[i - 1].shape[1]
+            if w.shape[0] != k_prev:
+                raise PlanError(
+                    f"weight {i} K={w.shape[0]} != producer M={k_prev}")
+        self.plan = plan
+        self.block = block
+        self.x_dim = x_dim
+        self.weights = tuple(weights)
+        self.perms = _boundary_perms(plan, x_dim, weights, block)
+        self.w_eff = [
+            permute_weight_blocks(w, self.perms[i], block)
+            if len(self.perms[i]) > 1 else w
+            for i, w in enumerate(weights)]
+
+    def __call__(self, x: jax.Array, *,
+                 activation: Optional[Callable[[jax.Array], jax.Array]] = None,
+                 use_pallas: bool = True) -> jax.Array:
+        plan, block, perms = self.plan, self.block, self.perms
+        cur = apply_block_perm(x, perms[0], block) if len(perms[0]) > 1 else x
+        for i, (step, w_eff) in enumerate(zip(plan.steps, self.w_eff)):
+            out_perm = perms[i + 1]
+            tiled = (cur.shape[0] % block == 0 and w_eff.shape[0] % block == 0
+                     and w_eff.shape[1] % block == 0)
+            if use_pallas and tiled and step.kernel == "rir_matmul":
+                cur = ops.rir_matmul(cur, w_eff, out_perm
+                                     if len(out_perm) > 1 else None,
+                                     block_m=block, block_n=block,
+                                     block_k=block)
+            else:
+                y = jnp.dot(cur, w_eff, preferred_element_type=jnp.float32)
+                y = y.astype(cur.dtype)
+                cur = apply_block_perm(y, out_perm, block) \
+                    if len(out_perm) > 1 else y
+            if activation is not None and i < len(plan.steps) - 1:
+                cur = activation(cur)   # elementwise: commutes with block perms
+        return invert_block_perm(cur, perms[-1], block) \
+            if len(perms[-1]) > 1 else cur
+
+
+def prepare_plan(plan: ExecutionPlan, x_dim: int,
+                 weights: Sequence[jax.Array], *,
+                 block: int = RIR_BLOCK) -> PreparedPlan:
+    """Hoist boundary perms + effective weights out of the per-call path."""
+    return PreparedPlan(plan, x_dim, weights, block=block)
+
+
 def execute_plan(plan: ExecutionPlan, x: jax.Array,
                  weights: Sequence[jax.Array], *, block: int = RIR_BLOCK,
                  activation: Optional[Callable[[jax.Array], jax.Array]] = None,
-                 use_pallas: bool = True) -> jax.Array:
+                 use_pallas: bool = True,
+                 prepared: Optional[PreparedPlan] = None) -> jax.Array:
     """Execute a planned GEMM chain end-to-end; returns canonical output.
 
     x: (tokens, K0); weights[i]: (K_i, M_i) with M_i == K_{i+1}.  Each step
     runs the RIR matmul with the epilogue permutation derived from the plan's
     consecutive boundary layouts; intermediate activations only ever exist in
     their planned boundary layouts.  ``use_pallas=False`` swaps in the
-    ``kernels/ref.py`` oracle per step (the verification path).
+    ``kernels/ref.py`` oracle per step (the verification path).  Pass a
+    ``prepared`` ``PreparedPlan`` to skip the per-call index/weight setup —
+    it must have been built from THIS plan and these weights (checked, so a
+    stale prepared object fails loudly instead of computing with old
+    weights).
     """
-    if len(weights) != len(plan.steps):
-        raise PlanError(f"{len(weights)} weights for {len(plan.steps)} steps")
-    for i, w in enumerate(weights):
-        k_prev = x.shape[-1] if i == 0 else weights[i - 1].shape[1]
-        if w.shape[0] != k_prev:
-            raise PlanError(f"weight {i} K={w.shape[0]} != producer M={k_prev}")
-
-    perms = _boundary_perms(plan, x.shape[-1], weights, block)
-    cur = apply_block_perm(x, perms[0], block) if len(perms[0]) > 1 else x
-    for i, (step, w) in enumerate(zip(plan.steps, weights)):
-        in_perm, out_perm = perms[i], perms[i + 1]
-        w_eff = permute_weight_blocks(w, in_perm, block) \
-            if len(in_perm) > 1 else w
-        tiled = (cur.shape[0] % block == 0 and w_eff.shape[0] % block == 0
-                 and w_eff.shape[1] % block == 0)
-        if use_pallas and tiled and step.kernel == "rir_matmul":
-            cur = ops.rir_matmul(cur, w_eff, out_perm
-                                 if len(out_perm) > 1 else None,
-                                 block_m=block, block_n=block, block_k=block)
-        else:
-            y = jnp.dot(cur, w_eff, preferred_element_type=jnp.float32)
-            y = y.astype(cur.dtype)
-            cur = apply_block_perm(y, out_perm, block) \
-                if len(out_perm) > 1 else y
-        if activation is not None and i < len(plan.steps) - 1:
-            cur = activation(cur)    # elementwise: commutes with block perms
-    return invert_block_perm(cur, perms[-1], block) \
-        if len(perms[-1]) > 1 else cur
+    if prepared is None:
+        prepared = PreparedPlan(plan, x.shape[-1], weights, block=block)
+    elif (prepared.plan != plan or prepared.block != block
+          or prepared.x_dim != x.shape[-1]
+          or len(prepared.weights) != len(weights)
+          or any(got is not want for got, want
+                 in zip(prepared.weights, weights))):
+        raise PlanError("prepared= was built from a different "
+                        "(plan, weights, block) than this call's arguments")
+    return prepared(x, activation=activation, use_pallas=use_pallas)
 
 
 def execute_plan_reference(plan: ExecutionPlan, x: jax.Array,

@@ -24,9 +24,12 @@ import dataclasses
 import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.dataflow import ConvWorkload, Dataflow, enumerate_dataflows
 from repro.core.layout import Layout, conv_layout_space
-from repro.core.layoutloop import (EvalConfig, Metrics, evaluate,
+from repro.core.layoutloop import (EvalConfig, LatticeMetrics, Metrics,
+                                   evaluate, evaluate_lattice,
                                    reorder_overhead)
 
 from .graph import LayerGraph
@@ -101,10 +104,19 @@ class _Path:
 
 
 class NetworkPlanner:
-    """Shared machinery for DP / greedy / brute-force planning (memoized)."""
+    """Shared machinery for DP / greedy / brute-force planning.
+
+    Each layer's full (dataflow x layout x mode) cost table is built by one
+    ``evaluate_lattice`` pass on first touch (``precompute_tables`` forces
+    all of them), so ``layer_cost`` / ``step_choice`` are argmin lookups
+    instead of scalar ``evaluate`` sweeps.  Pass ``use_lattice=False`` to
+    force the original scalar path — the oracle the table-driven planner is
+    asserted byte-identical against.
+    """
 
     def __init__(self, graph: LayerGraph, cfg: EvalConfig,
-                 opts: PlannerOptions = PlannerOptions()):
+                 opts: PlannerOptions = PlannerOptions(),
+                 use_lattice: bool = True):
         self.graph = graph
         self.cfg = cfg
         self.opts = opts
@@ -123,6 +135,34 @@ class NetworkPlanner:
         self._layer_memo: Dict[Tuple[int, str, str],
                                Tuple[float, Dataflow, Metrics]] = {}
         self._skip_memo: Dict[int, Tuple[float, float]] = {}
+        # every mode any boundary can engage (step_choice prepends "none")
+        self._modes: Tuple[str, ...] = ("none",) + tuple(
+            m for m in opts.switch_modes if m != "none")
+        self._mode_idx = {m: k for k, m in enumerate(self._modes)}
+        self._layout_idx = {l.name(): j for j, l in enumerate(self.layouts)}
+        self._use_lattice = use_lattice
+        self._tables: Dict[int, LatticeMetrics] = {}
+        self._keys: Dict[int, "np.ndarray"] = {}
+
+    def _table(self, i: int) -> LatticeMetrics:
+        """Layer ``i``'s cost table, built on first touch (one lattice pass).
+
+        Lazy so table-free consumers — ``fixed`` with a layout outside the
+        search space hits only the scalar fallback — pay nothing.
+        """
+        tab = self._tables.get(i)
+        if tab is None:
+            tab = evaluate_lattice(self.graph.layers[i], self._dfs[i],
+                                   self.layouts, self._modes, self.cfg)
+            self._tables[i] = tab
+            self._keys[i] = tab.key(self.opts.objective)
+        return tab
+
+    def precompute_tables(self) -> None:
+        """Force every layer's cost table (e.g. before timing a search)."""
+        if self._use_lattice:
+            for i in range(len(self.graph)):
+                self._table(i)
 
     # ---------------------------------------------------------------- layer cost
     def layer_cost(self, i: int, layout: Layout, mode: str
@@ -132,14 +172,24 @@ class NetworkPlanner:
         hit = self._layer_memo.get(memo_key)
         if hit is not None:
             return hit
-        wl = self.graph.layers[i]
-        best: Optional[Tuple[float, Dataflow, Metrics]] = None
-        for df in self._dfs[i]:
-            m = evaluate(wl, df, layout, self.cfg, reorder=mode)
-            k = _metric_key(m, self.opts.objective)
-            if best is None or k < best[0]:
-                best = (k, df, m)
-        assert best is not None, f"no dataflow candidates for layer {i}"
+        j = self._layout_idx.get(layout.name())
+        mi = self._mode_idx.get(mode)
+        if self._use_lattice and j is not None and mi is not None:
+            tab = self._table(i)
+            keys = self._keys[i][:, j, mi]
+            di = int(np.argmin(keys))    # first-min == scalar loop tie-break
+            best = (float(keys[di]), self._dfs[i][di], tab.metrics(di, j, mi))
+        else:
+            # scalar fallback: lattice disabled, or a layout outside the
+            # search space (``fixed`` with an external baseline layout)
+            wl = self.graph.layers[i]
+            best = None
+            for df in self._dfs[i]:
+                m = evaluate(wl, df, layout, self.cfg, reorder=mode)
+                k = _metric_key(m, self.opts.objective)
+                if best is None or k < best[0]:
+                    best = (k, df, m)
+            assert best is not None, f"no dataflow candidates for layer {i}"
         self._layer_memo[memo_key] = best
         return best
 

@@ -69,6 +69,24 @@ def test_birrd_pure_reorder_kernel():
     assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5, atol=1e-5)
 
 
+def test_birrd_reduce_memoizes_routing_and_lowering():
+    """Repeat calls with the same (aw, group_ids, out_ports) must hit the
+    routing/compilation cache instead of re-searching the switch network."""
+    from repro.kernels.birrd_reduce import _routed_stage_mats
+    gids, ports = [i // 2 for i in range(8)], [2 * g for g in range(4)]
+    y0 = ops.birrd_reduce(_arr((8, 128)), gids, ports)
+    before = _routed_stage_mats.cache_info()
+    x = _arr((8, 128))
+    y1 = ops.birrd_reduce(x, gids, ports)
+    after = _routed_stage_mats.cache_info()
+    assert after.hits == before.hits + 1
+    assert after.misses == before.misses
+    yr = ref.birrd_reduce(x, jnp.asarray(gids, jnp.int32),
+                          jnp.asarray(ports, jnp.int32), 8)
+    assert_allclose(np.asarray(y1), np.asarray(yr), rtol=1e-5, atol=1e-5)
+    del y0
+
+
 # ------------------------------------------------------------------ gqa_decode
 @pytest.mark.parametrize("b,hq,hkv,d,s", [
     (2, 8, 2, 64, 512), (1, 4, 4, 128, 1024), (3, 8, 1, 64, 2048),

@@ -1,0 +1,192 @@
+"""Batched lattice engine — equivalence against the scalar oracle.
+
+``evaluate_lattice`` / ``assess_iact_conflicts_grid`` must reproduce the
+scalar ``evaluate`` / ``assess_iact_conflicts`` numbers *bit-for-bit*, and
+the table-driven ``NetworkPlanner`` must emit byte-identical plan artifacts
+to the pre-refactor scalar path.  Randomized lattices are hypothesis-backed
+where available, with a seeded fallback otherwise.
+"""
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.conflicts import (assess_iact_conflicts,
+                                  assess_iact_conflicts_grid)
+from repro.core.dataflow import ConvWorkload, enumerate_dataflows
+from repro.core.layout import Layout, conv_layout_space
+from repro.core.layoutloop import (EvalConfig, cosearch_layer, evaluate,
+                                   evaluate_lattice, network_eval,
+                                   reorder_overhead)
+from repro.core.nest import NestConfig
+from repro.plan import (NetworkPlanner, PlannerOptions, bert_graph,
+                        mobilenet_v3_graph, resnet50_graph)
+
+MODES = ("none", "offchip", "line_rotation", "transpose", "row_reorder", "rir")
+RELIEFS = ("none", "line_rotation", "transpose", "row_reorder", "arbitrary")
+SMALL_LAYOUTS = tuple(Layout.parse(s)
+                      for s in ("HWC_C32", "HWC_H32", "HWC_C4W8"))
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def random_workload(rng: np.random.Generator) -> ConvWorkload:
+    if rng.random() < 0.3:   # GEMM-able 1x1 layer
+        return ConvWorkload.from_gemm(M=int(rng.integers(8, 256)),
+                                      N=int(rng.integers(8, 128)),
+                                      K=int(rng.integers(8, 256)),
+                                      name="rand-gemm")
+    return ConvWorkload(N=int(rng.integers(1, 3)),
+                        M=int(rng.integers(4, 128)),
+                        C=int(rng.integers(4, 128)),
+                        P=int(rng.integers(4, 40)),
+                        Q=int(rng.integers(4, 40)),
+                        R=int(rng.choice([1, 3, 5])),
+                        S=int(rng.choice([1, 3, 5])),
+                        stride=int(rng.choice([1, 2])),
+                        name="rand-conv")
+
+
+def assert_lattice_matches_scalar(wl: ConvWorkload, cfg: EvalConfig,
+                                  max_dfs: int = 8) -> None:
+    pes = cfg.nest.aw * cfg.nest.ah
+    dfs = list(enumerate_dataflows(wl, pes))
+    if len(dfs) > max_dfs:
+        keep = np.random.default_rng(wl.macs() % 2**31).choice(
+            len(dfs), size=max_dfs, replace=False)
+        dfs = [dfs[i] for i in sorted(keep)]
+    layouts = conv_layout_space()
+    lat = evaluate_lattice(wl, dfs, layouts, MODES, cfg)
+    for di, df in enumerate(dfs):
+        for li, lay in enumerate(layouts):
+            for mi, mode in enumerate(MODES):
+                want = evaluate(wl, df, lay, cfg, reorder=mode)
+                got = lat.metrics(di, li, mi)
+                for f in dataclasses.fields(want):
+                    assert getattr(got, f.name) == getattr(want, f.name), (
+                        wl.name, df.label(), lay.name(), mode, f.name,
+                        getattr(got, f.name), getattr(want, f.name))
+
+
+# ------------------------------------------------------- lattice == scalar
+def test_conflict_grid_matches_scalar_seeded():
+    rng = np.random.default_rng(7)
+    cfg = EvalConfig(nest=NestConfig(aw=8, ah=8))
+    layouts = conv_layout_space()
+    for _ in range(6):
+        wl = random_workload(rng)
+        dfs = list(enumerate_dataflows(wl, 64))
+        df = dfs[int(rng.integers(len(dfs)))]
+        grid = assess_iact_conflicts_grid(wl, df, layouts, cfg.buffer, RELIEFS)
+        for r in RELIEFS:
+            for li, lay in enumerate(layouts):
+                assert grid[r][li] == assess_iact_conflicts(
+                    wl, df, lay, cfg.buffer, reorder=r)
+
+
+def test_lattice_matches_scalar_seeded():
+    rng = np.random.default_rng(0)
+    cfg = EvalConfig(nest=NestConfig(aw=8, ah=8))
+    for _ in range(8):
+        assert_lattice_matches_scalar(random_workload(rng), cfg)
+
+
+def test_lattice_matches_scalar_paper_layers():
+    # the acceptance config: 16x16 NEST on real evaluation layers
+    from repro.core.workloads import mobilenet_v3_layers
+    cfg = EvalConfig()
+    for wl in mobilenet_v3_layers()[:3]:
+        assert_lattice_matches_scalar(wl, cfg, max_dfs=6)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(4, 128), st.integers(4, 128), st.integers(4, 32),
+           st.integers(4, 32), st.sampled_from([1, 3, 5]),
+           st.sampled_from([1, 2]))
+    def test_lattice_matches_scalar_hypothesis(m, c, p, q, r, stride):
+        wl = ConvWorkload(M=m, C=c, P=p, Q=q, R=r, S=r, stride=stride,
+                          name="hyp")
+        assert_lattice_matches_scalar(
+            wl, EvalConfig(nest=NestConfig(aw=8, ah=8)), max_dfs=4)
+
+
+# ------------------------------------------------------------ error handling
+def test_unknown_reorder_mode_raises_value_error():
+    wl = ConvWorkload.from_gemm(64, 64, 64)
+    df = next(iter(enumerate_dataflows(wl, 256)))
+    lay = Layout.parse("HWC_C32")
+    with pytest.raises(ValueError, match="unknown reorder mode 'bogus'"):
+        evaluate(wl, df, lay, EvalConfig(), reorder="bogus")
+    with pytest.raises(ValueError, match="unknown reorder mode 'bogus'"):
+        evaluate(wl, df, lay, EvalConfig(reorder="bogus"))
+    with pytest.raises(ValueError, match="unknown reorder mode 'bogus'"):
+        evaluate_lattice(wl, [df], [lay], ("none", "bogus"), EvalConfig())
+    with pytest.raises(ValueError, match="unknown reorder mode 'bogus'"):
+        reorder_overhead(wl, EvalConfig(), "bogus")
+
+
+# ----------------------------------------------------- argmin-based consumers
+def test_cosearch_layer_matches_scalar_loop():
+    cfg = EvalConfig(reorder="rir")
+    wl = ConvWorkload(M=96, C=48, P=14, Q=14, R=3, S=3, name="l")
+    for objective in ("edp", "cycles"):
+        got = cosearch_layer(wl, cfg, objective=objective)
+        best = None
+        for lay in conv_layout_space():
+            for df in enumerate_dataflows(wl, 256):
+                m = evaluate(wl, df, lay, cfg)
+                key = m.edp if objective == "edp" else m.cycles
+                if best is None or key < (best[0]):
+                    best = (key, df, lay, m)
+        assert (got.dataflow, got.layout, got.metrics) == best[1:]
+
+
+def test_network_eval_fixed_layout_matches_scalar_loop():
+    cfg = EvalConfig(reorder="none")
+    layers = [ConvWorkload(M=64, C=32, P=14, Q=14, R=1, S=1, name="a"),
+              ConvWorkload(M=32, C=64, P=7, Q=7, R=3, S=3, name="b")]
+    got = network_eval(layers, cfg, per_layer_layout=False)
+    best_total, best = None, None
+    for lay in conv_layout_space():
+        res = [cosearch_layer(l, cfg, layout_fixed=lay) for l in layers]
+        total = sum(r.metrics.edp for r in res)
+        if best_total is None or total < best_total:
+            best_total, best = total, res
+    assert [(r.layout, r.dataflow, r.metrics) for r in got] == \
+        [(r.layout, r.dataflow, r.metrics) for r in best]
+
+
+# ------------------------------------------- planner: table path == scalar path
+@pytest.mark.parametrize("graph_fn,modes", [
+    (resnet50_graph, ("offchip",)),
+    (mobilenet_v3_graph, ("rir", "offchip")),
+    (lambda: bert_graph(layers_sampled=1), ("rir",)),
+])
+def test_planner_table_path_emits_identical_plan_json(graph_fn, modes):
+    graph = graph_fn()
+    cfg = EvalConfig()
+    opts = PlannerOptions(switch_modes=modes, layouts=SMALL_LAYOUTS,
+                          parallel_dims=("C", "P", "Q"))
+    fast = NetworkPlanner(graph, cfg, opts)
+    slow = NetworkPlanner(graph, cfg, opts, use_lattice=False)
+    assert fast.plan().to_json() == slow.plan().to_json()
+    assert fast.greedy().to_json() == slow.greedy().to_json()
+
+
+# --------------------------------------------------------------- CI speed guard
+def test_mobv3_full_plan_under_wall_time_budget():
+    """Regression guard: a scalar-path fallback would take ~14s; the lattice
+    path takes well under a second.  60s is generous for any sane machine."""
+    opts = PlannerOptions(switch_modes=("rir", "offchip"),
+                          parallel_dims=("C", "P", "Q"))
+    t0 = time.perf_counter()
+    plan = NetworkPlanner(mobilenet_v3_graph(), EvalConfig(), opts).plan()
+    elapsed = time.perf_counter() - t0
+    assert len(plan.steps) == len(mobilenet_v3_graph())
+    assert elapsed < 60.0, f"mobv3 planning took {elapsed:.1f}s (budget 60s)"

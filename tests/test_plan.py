@@ -10,7 +10,8 @@ from repro.core.layoutloop import EvalConfig
 from repro.plan import (ExecutionPlan, NetworkPlanner, PlanCache, PlanError,
                         PlannerOptions, bert_graph, execute_plan,
                         execute_plan_reference, from_arch_config, from_layers,
-                        layout_block_perm, mobilenet_v3_graph, resnet50_graph)
+                        layout_block_perm, mobilenet_v3_graph, prepare_plan,
+                        resnet50_graph)
 from repro.plan.executor import (apply_block_perm, invert_block_perm,
                                  permute_weight_blocks)
 
@@ -172,6 +173,43 @@ def test_executor_matches_ref_oracle_after_roundtrip(tmp_path):
     y_plain = np.asarray(x @ ws[0] @ ws[1] @ ws[2])
     np.testing.assert_allclose(y_pallas, y_ref, rtol=1e-4, atol=0.1)
     np.testing.assert_allclose(y_pallas, y_plain, rtol=1e-4, atol=0.1)
+
+
+def test_prepared_plan_reuse_matches_per_call_setup():
+    """prepare_plan hoists perms/effective weights once; repeat calls over
+    fresh batches match the unprepared path and the plain matmul chain."""
+    opts = PlannerOptions(switch_modes=("rir",), layouts=SMALL_LAYOUTS,
+                          parallel_dims=("C", "P", "Q"))
+    plan = NetworkPlanner(gemm_chain(), EvalConfig(), opts).plan()
+    rng = np.random.default_rng(3)
+    ws = [jnp.asarray(rng.normal(size=(256, 384)), jnp.float32),
+          jnp.asarray(rng.normal(size=(384, 512)), jnp.float32),
+          jnp.asarray(rng.normal(size=(512, 256)), jnp.float32)]
+    prepared = prepare_plan(plan, 256, ws)
+    for _ in range(3):   # e.g. consecutive serving batches
+        x = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
+        y_prep = np.asarray(execute_plan(plan, x, ws, prepared=prepared))
+        y_cold = np.asarray(execute_plan(plan, x, ws))
+        y_plain = np.asarray(x @ ws[0] @ ws[1] @ ws[2])
+        np.testing.assert_array_equal(y_prep, y_cold)
+        np.testing.assert_allclose(y_prep, y_plain, rtol=1e-4, atol=0.1)
+
+
+def test_stale_prepared_plan_rejected():
+    """prepared= built from different weights/plan must fail loudly, not
+    silently compute with the old pre-permuted weights."""
+    opts = PlannerOptions(switch_modes=("rir",), layouts=SMALL_LAYOUTS,
+                          parallel_dims=("C", "P", "Q"))
+    plan = NetworkPlanner(gemm_chain(), EvalConfig(), opts).plan()
+    rng = np.random.default_rng(4)
+    ws = [jnp.asarray(rng.normal(size=(256, 384)), jnp.float32),
+          jnp.asarray(rng.normal(size=(384, 512)), jnp.float32),
+          jnp.asarray(rng.normal(size=(512, 256)), jnp.float32)]
+    prepared = prepare_plan(plan, 256, ws)
+    x = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
+    new_ws = [w + 1.0 for w in ws]
+    with pytest.raises(PlanError, match="different"):
+        execute_plan(plan, x, new_ws, prepared=prepared)
 
 
 def test_executor_with_activation_and_forced_switches():

@@ -6,7 +6,7 @@ FEATHER's flexible (dataflow, layout) keeps the array full.
 """
 from __future__ import annotations
 
-from repro.core.dataflow import Dataflow, enumerate_dataflows
+from repro.core.dataflow import Dataflow
 from repro.core.layoutloop import EvalConfig, cosearch_layer, evaluate
 from repro.core.layout import Layout
 from repro.core.workloads import mobilenet_v3_layers, resnet50_layers

@@ -9,11 +9,11 @@ Four bars over ResNet-50 on a 16x16 array:
 from __future__ import annotations
 
 from repro.core.dataflow import Dataflow, enumerate_dataflows
-from repro.core.layout import Layout, conv_layout_space
+from repro.core.layout import Layout
 from repro.core.layoutloop import EvalConfig, cosearch_layer, evaluate
 from repro.core.workloads import resnet50_layers
 
-from .common import emit, geomean
+from .common import emit
 
 
 def run(layers=None):

@@ -13,9 +13,9 @@ from __future__ import annotations
 
 import json
 import pathlib
-from typing import Dict, List, Optional
+from typing import Dict, List
 
-from repro.core.tpu_cost import RooflineTerms, model_flops, terms_from_counts
+from repro.core.tpu_cost import model_flops, terms_from_counts
 
 from .common import emit
 

@@ -23,7 +23,7 @@ import pathlib
 import re
 import shutil
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np

@@ -1,7 +1,6 @@
 """Assigned architecture registry: one module per arch + reduced smoke twins."""
 from __future__ import annotations
 
-import dataclasses
 import importlib
 from typing import Dict, List
 

@@ -10,7 +10,7 @@ import dataclasses
 from typing import List, Optional, Sequence
 
 from .dataflow import ConvWorkload, Dataflow, enumerate_dataflows
-from .layout import Buffer, Layout
+from .layout import Layout
 from .layoutloop import EvalConfig, SearchResult, cosearch_layer, network_eval
 from .nest import NestConfig
 

@@ -2,12 +2,58 @@
 
 A representative subset of layers (the paper evaluates per-layer and reports
 geomeans); shapes are the standard published layer dims.
+
+Besides the layer lists, this module owns the *execution-side* view of a
+``ConvWorkload``: which layers are depthwise (the Mob-V3 dw layers are
+modeled as ``C == 1`` with ``M`` = channels), what shape their weight tensor
+takes, and a seeded initializer so the plan executor and its reference
+oracle agree on concrete weights for a whole graph.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Tuple
+
+import numpy as np
 
 from .dataflow import ConvWorkload
+
+
+def is_depthwise(wl: ConvWorkload) -> bool:
+    """Mob-V3 style depthwise layer: per-channel RxS filters, no C reduction.
+
+    The analytical model stores these as ``C == 1`` with ``M`` = channel
+    count; a 1x1 layer with C == 1 is a degenerate dense conv, not depthwise.
+    """
+    return wl.C == 1 and wl.M > 1 and (wl.R > 1 or wl.S > 1)
+
+
+def input_channels(wl: ConvWorkload) -> int:
+    """Channels the layer actually reads (M for depthwise, C otherwise)."""
+    return wl.M if is_depthwise(wl) else wl.C
+
+
+def weight_shape(wl: ConvWorkload) -> Tuple[int, ...]:
+    """Natural weight tensor shape: (R, S, M) depthwise, else (R, S, C, M)."""
+    if is_depthwise(wl):
+        return (wl.R, wl.S, wl.M)
+    return (wl.R, wl.S, wl.C, wl.M)
+
+
+def init_graph_weights(layers: List[ConvWorkload] | Tuple[ConvWorkload, ...],
+                       seed: int = 0) -> List[np.ndarray]:
+    """Seeded fp32 weights for every layer (1/sqrt(fan-in) scaled normals).
+
+    Shared by the plan executor tests, the example, and the executed
+    benchmark so all paths run the *same* concrete network.
+    """
+    rng = np.random.default_rng(seed)
+    out: List[np.ndarray] = []
+    for wl in layers:
+        shape = weight_shape(wl)
+        fan_in = wl.R * wl.S * (1 if is_depthwise(wl) else wl.C)
+        out.append((rng.normal(size=shape) / np.sqrt(fan_in))
+                   .astype(np.float32))
+    return out
 
 
 def resnet50_layers() -> List[ConvWorkload]:

@@ -1,15 +1,13 @@
 """Distributed train / serve step builders (pjit + per-layer layout plans)."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig
-from repro.optim import adamw_init, adamw_update, wsd_schedule
+from repro.optim import adamw_update
 from .sharding import (batch_sharding, cache_shardings, hidden_sharding,
                        opt_shardings, param_shardings, _axes)
 

@@ -17,7 +17,7 @@ program, not the kernel.
 from __future__ import annotations
 
 import functools
-from typing import List, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

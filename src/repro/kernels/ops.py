@@ -35,14 +35,17 @@ def _interpret() -> bool:
 
 def rir_matmul(a: jax.Array, b: jax.Array,
                out_block_perm: Optional[Sequence[int]] = None, *,
+               residual: Optional[jax.Array] = None,
                block_m: int = 128, block_n: int = 128, block_k: int = 128
                ) -> jax.Array:
     if not _KERNELS_ENABLED:
         return ref.rir_matmul(a, b, out_block_perm or
-                              tuple(range(b.shape[1] // block_n)), block_n)
+                              tuple(range(b.shape[1] // block_n)), block_n,
+                              residual=residual)
     perm = tuple(out_block_perm) if out_block_perm is not None else None
-    return _rir_matmul(a, b, perm, block_m=block_m, block_n=block_n,
-                       block_k=block_k, interpret=_interpret())
+    return _rir_matmul(a, b, perm, residual=residual, block_m=block_m,
+                       block_n=block_n, block_k=block_k,
+                       interpret=_interpret())
 
 
 def birrd_reduce(x: jax.Array, group_ids: Sequence[int],

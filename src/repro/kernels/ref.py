@@ -13,10 +13,15 @@ import jax.numpy as jnp
 
 # ----------------------------------------------------------------- rir_matmul
 def rir_matmul(a: jax.Array, b: jax.Array, out_block_perm: Sequence[int],
-               block_n: int) -> jax.Array:
+               block_n: int, residual: Optional[jax.Array] = None
+               ) -> jax.Array:
     """GEMM whose output N-blocks are written in permuted order (RIR epilogue).
 
     out[:, perm[j]*bn : (perm[j]+1)*bn] = (a @ b)[:, j*bn : (j+1)*bn]
+
+    ``residual`` (if given) is already stored in the *output* block order and
+    is added in the epilogue — the fused skip-connection add of the plan
+    executor (paper Fig. 9's accumulate-into-StaB path).
     """
     y = jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
     n_blocks = y.shape[1] // block_n
@@ -25,7 +30,49 @@ def rir_matmul(a: jax.Array, b: jax.Array, out_block_perm: Sequence[int],
         pj = int(out_block_perm[j])
         out = out.at[:, pj * block_n:(pj + 1) * block_n].set(
             y[:, j * block_n:(j + 1) * block_n])
+    if residual is not None:
+        out = out + residual.astype(out.dtype)
     return out
+
+
+# ----------------------------------------------------------- conv2d (+depthwise)
+def conv2d(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """Valid (no-padding) NHWC convolution oracle.
+
+    x: (N, H, W, C); w: (R, S, C, M).  Returns (N, P, Q, M) with
+    P = (H - R)//stride + 1, Q = (W - S)//stride + 1 — the ``ConvWorkload``
+    convention, where the workload's H/W already include any SAME padding.
+    """
+    N, H, W, C = x.shape
+    R, S, _, M = w.shape
+    P = (H - R) // stride + 1
+    Q = (W - S) // stride + 1
+    y = jnp.zeros((N, P, Q, M), jnp.float32)
+    for r in range(R):
+        for s in range(S):
+            tap = x[:, r:r + (P - 1) * stride + 1:stride,
+                    s:s + (Q - 1) * stride + 1:stride, :]
+            y = y + jnp.einsum("npqc,cm->npqm", tap.astype(jnp.float32),
+                               w[r, s].astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def depthwise_conv2d(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """Valid NHWC depthwise convolution oracle.
+
+    x: (N, H, W, M); w: (R, S, M) — one RxS filter per channel.
+    """
+    N, H, W, M = x.shape
+    R, S, _ = w.shape
+    P = (H - R) // stride + 1
+    Q = (W - S) // stride + 1
+    y = jnp.zeros((N, P, Q, M), jnp.float32)
+    for r in range(R):
+        for s in range(S):
+            tap = x[:, r:r + (P - 1) * stride + 1:stride,
+                    s:s + (Q - 1) * stride + 1:stride, :]
+            y = y + tap.astype(jnp.float32) * w[r, s].astype(jnp.float32)
+    return y.astype(x.dtype)
 
 
 # --------------------------------------------------------------- birrd_reduce

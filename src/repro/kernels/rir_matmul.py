@@ -39,15 +39,40 @@ def _kernel(perm_ref, a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _kernel_res(perm_ref, a_ref, b_ref, r_ref, o_ref, acc_ref, *,
+                k_steps: int):
+    """Residual-fused variant: the skip tensor rides the epilogue write.
+
+    ``r_ref`` is blocked with the SAME permuted index map as the output, so
+    the residual is consumed in its stored (boundary-layout) order — the
+    fused skip-connection add costs no extra pass over the activation.
+    """
+    del perm_ref
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _emit():
+        o_ref[...] = (acc_ref[...]
+                      + r_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "block_m", "block_n", "block_k", "interpret"))
 def rir_matmul_p(a: jax.Array, b: jax.Array, out_block_perm: jax.Array, *,
+                 residual: jax.Array | None = None,
                  block_m: int = 128, block_n: int = 128, block_k: int = 128,
                  interpret: bool = True) -> jax.Array:
     """``(a @ b)`` with output N-blocks scattered per ``out_block_perm``.
 
     a: (M, K), b: (K, N); out_block_perm: int32[(N//block_n,)] permutation
-    (a *dynamic* operand — the RIR "instruction buffer").
+    (a *dynamic* operand — the RIR "instruction buffer").  ``residual``
+    (optional, (M, N), stored in the *output* block order) is added in the
+    epilogue on the last K step — the executor's fused residual-join path.
     """
     M, K = a.shape
     K2, N = b.shape
@@ -58,15 +83,27 @@ def rir_matmul_p(a: jax.Array, b: jax.Array, out_block_perm: jax.Array, *,
     k_steps = K // block_k
     grid = (M // block_m, n_blocks, k_steps)
 
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, k, perm: (i, k)),
+        pl.BlockSpec((block_k, block_n), lambda i, j, k, perm: (k, j)),
+    ]
+    operands = [a, b]
+    kernel = _kernel
+    if residual is not None:
+        assert residual.shape == (M, N), (residual.shape, (M, N))
+        # the residual is read through the same permuted map the output is
+        # written through: both live in the consumer's boundary layout
+        in_specs.append(pl.BlockSpec((block_m, block_n),
+                                     lambda i, j, k, perm: (i, perm[j])))
+        operands.append(residual)
+        kernel = _kernel_res
+
     return pl.pallas_call(
-        functools.partial(_kernel, k_steps=k_steps),
+        functools.partial(kernel, k_steps=k_steps),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((block_m, block_k), lambda i, j, k, perm: (i, k)),
-                pl.BlockSpec((block_k, block_n), lambda i, j, k, perm: (k, j)),
-            ],
+            in_specs=in_specs,
             # RIR: the output tile index is permuted — layout switching
             # happens in the write, not as a separate pass.
             out_specs=pl.BlockSpec((block_m, block_n),
@@ -77,11 +114,12 @@ def rir_matmul_p(a: jax.Array, b: jax.Array, out_block_perm: jax.Array, *,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(out_block_perm.astype(jnp.int32), a, b)
+    )(out_block_perm.astype(jnp.int32), *operands)
 
 
 def rir_matmul(a: jax.Array, b: jax.Array,
                out_block_perm: Sequence[int] | None = None, *,
+               residual: jax.Array | None = None,
                block_m: int = 128, block_n: int = 128, block_k: int = 128,
                interpret: bool = True) -> jax.Array:
     n_blocks = b.shape[1] // block_n
@@ -90,5 +128,5 @@ def rir_matmul(a: jax.Array, b: jax.Array,
     assert sorted(int(p) for p in out_block_perm) == list(range(n_blocks)), \
         "not a permutation"
     perm = jnp.asarray(list(out_block_perm), jnp.int32)
-    return rir_matmul_p(a, b, perm, block_m=block_m, block_n=block_n,
-                        block_k=block_k, interpret=interpret)
+    return rir_matmul_p(a, b, perm, residual=residual, block_m=block_m,
+                        block_n=block_n, block_k=block_k, interpret=interpret)

@@ -42,7 +42,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
     from repro.launch.specs import input_specs
     from repro.models import build_model
     from repro.optim.adamw import AdamWState
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
     ops.use_kernels(False)  # dry-run lowers the pure-XLA path (shardable)
     cfg = get_config(arch)

@@ -1,13 +1,13 @@
 """ShapeDtypeStruct stand-ins for every model input (no device allocation)."""
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.configs.base import ArchConfig, ShapeCell, shape_by_name
+from repro.configs.base import shape_by_name
 from repro.models import build_model
 
 

@@ -9,10 +9,9 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig
 from .blocks import (attn_decode, attn_prefill, attn_specs, attn_train,
                      cross_attn_train, mlp_apply, mlp_specs)
-from .common import apply_norm, chunked_attention, dense, norm_spec
+from .common import apply_norm, dense, norm_spec
 from .lm import LMModel, _stack_specs, chunked_ce_loss, init_from_specs
 
 

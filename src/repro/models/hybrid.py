@@ -6,12 +6,11 @@ through a down-projection, per the Zamba design.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig
 from .blocks import attn_decode, attn_specs, attn_train, mlp_apply, mlp_specs
 from .common import apply_norm, dense, norm_spec
 from .lm import LMModel, _stack_specs, init_from_specs

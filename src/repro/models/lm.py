@@ -8,7 +8,6 @@ co-switching attaches (see distributed/sharding.py).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax

@@ -1,8 +1,7 @@
 """AdamW with bf16 params + fp32 moments/master copy (mixed precision)."""
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

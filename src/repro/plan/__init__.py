@@ -9,21 +9,25 @@ Pallas RIR kernels (``executor``).
 """
 from .graph import (LayerGraph, bert_graph, from_arch_config, from_layers,
                     mobilenet_v3_graph, resnet50_graph)
-from .plan import (ExecutionPlan, PlanCache, PlanStep, config_key,
+from .plan import (ExecutionPlan, JoinSpec, PlanCache, PlanStep, config_key,
                    layout_block_perm)
 from .search import (NetworkPlanner, PlannerOptions, brute_force_plan,
                      fixed_plan, greedy_plan, plan_network)
-from .executor import (PlanError, PreparedPlan, execute_plan,
+from .executor import (PlanError, PreparedNetwork, PreparedPlan,
+                       adapt_activation, execute_network,
+                       execute_network_reference, execute_plan,
                        execute_plan_reference, permute_weight_blocks,
-                       prepare_plan)
+                       prepare_network, prepare_plan)
 
 __all__ = [
     "LayerGraph", "from_layers", "resnet50_graph", "mobilenet_v3_graph",
     "bert_graph", "from_arch_config",
-    "ExecutionPlan", "PlanStep", "PlanCache", "config_key",
+    "ExecutionPlan", "PlanStep", "JoinSpec", "PlanCache", "config_key",
     "layout_block_perm",
     "NetworkPlanner", "PlannerOptions", "plan_network", "greedy_plan",
     "brute_force_plan", "fixed_plan",
     "PlanError", "PreparedPlan", "prepare_plan", "execute_plan",
     "execute_plan_reference", "permute_weight_blocks",
+    "PreparedNetwork", "prepare_network", "execute_network",
+    "execute_network_reference", "adapt_activation",
 ]

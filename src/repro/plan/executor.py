@@ -23,18 +23,40 @@ path, so a served plan pays the index/weight setup once, not per batch.
 The executor's output (returned in canonical block order) is bit-identical
 to the plain ``x @ W1 @ ... @ Wn`` chain; tests assert this against the
 ``kernels/ref.py`` oracles.
+
+Beyond GEMM chains, ``execute_network`` runs COMPLETE ``LayerGraph``s —
+convolutions and residual joins included — through the same Pallas path:
+
+* Convolutions lower to implicit GEMM: an im2col patch gather whose row map
+  composes the boundary adapter with the tap offsets, and whose column
+  order is the *producer's stored (boundary-layout) order*, so the consumer
+  reads the discordant-free layout directly.  The layout choice is folded
+  into the effective weight (per-tap K-block alignment), never into a
+  standalone relayout pass.  Depthwise layers use the block-diagonal dense
+  form of the same GEMM.
+* Skip edges (``LayerGraph.skip_edges``) buffer the source activation in
+  its boundary layout; at the join the planner-recorded relayout
+  (``PlanStep.joins``) is applied, and when the two boundary layouts agree
+  the residual add is FUSED into the consumer's ``rir_matmul`` epilogue
+  (the kernel's ``residual`` operand) — no separate pass.
+
+All of it validates against the canonical ``execute_network_reference``
+oracle built on ``kernels/ref.py`` conv/depthwise references.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.workloads import input_channels, is_depthwise, weight_shape
 from repro.kernels import ops, ref
 
+from .graph import LayerGraph
 from .plan import RIR_BLOCK, ExecutionPlan, layout_block_perm
 
 
@@ -84,10 +106,14 @@ def permute_weight_blocks(w: jax.Array, in_perm: Sequence[int],
     return w[_gather_indices(tuple(in_perm), block), :]
 
 
-def _boundary_perms(plan: ExecutionPlan, x_dim: int,
-                    weights: Sequence[jax.Array],
-                    block: int) -> List[tuple]:
-    """Derive every boundary's block permutation from consecutive entries."""
+def _derive_boundary_perms(plan: ExecutionPlan, dims: Sequence[int],
+                           block: int) -> List[tuple]:
+    """Derive every boundary's block permutation from consecutive entries.
+
+    ``dims[b]`` is the feature width of boundary ``b`` (network input for
+    b=0, layer b-1's output after).  Shared by the GEMM-chain and
+    whole-network prepared paths so the perm rules can never diverge.
+    """
     steps = plan.steps
     for i in range(len(steps) - 1):
         if steps[i].out_layout != steps[i + 1].in_layout:
@@ -95,7 +121,6 @@ def _boundary_perms(plan: ExecutionPlan, x_dim: int,
                 f"plan discontinuity at {steps[i].layer} -> "
                 f"{steps[i + 1].layer}: {steps[i].out_layout} != "
                 f"{steps[i + 1].in_layout}")
-    dims = [x_dim] + [w.shape[1] for w in weights]
     perms = []
     for b, dim in enumerate(dims):
         name = steps[b].in_layout if b < len(steps) else steps[-1].out_layout
@@ -112,6 +137,14 @@ def _boundary_perms(plan: ExecutionPlan, x_dim: int,
         else:
             perms.append(layout_block_perm(name, n_blocks))
     return perms
+
+
+def _boundary_perms(plan: ExecutionPlan, x_dim: int,
+                    weights: Sequence[jax.Array],
+                    block: int) -> List[tuple]:
+    """GEMM-chain form: boundary widths come from the 2D weight shapes."""
+    return _derive_boundary_perms(
+        plan, [x_dim] + [w.shape[1] for w in weights], block)
 
 
 class PreparedPlan:
@@ -175,6 +208,16 @@ def prepare_plan(plan: ExecutionPlan, x_dim: int,
     return PreparedPlan(plan, x_dim, weights, block=block)
 
 
+def _prepared_is_stale(prepared, plan: ExecutionPlan, block: int,
+                       weights: Sequence[jax.Array]) -> bool:
+    """Shared (plan, block, weights-identity) staleness test for prepared
+    objects — a stale one must fail loudly, never compute with old state."""
+    return (prepared.plan != plan or prepared.block != block
+            or len(prepared.weights) != len(weights)
+            or any(got is not want for got, want
+                   in zip(prepared.weights, weights)))
+
+
 def execute_plan(plan: ExecutionPlan, x: jax.Array,
                  weights: Sequence[jax.Array], *, block: int = RIR_BLOCK,
                  activation: Optional[Callable[[jax.Array], jax.Array]] = None,
@@ -194,11 +237,8 @@ def execute_plan(plan: ExecutionPlan, x: jax.Array,
     """
     if prepared is None:
         prepared = PreparedPlan(plan, x.shape[-1], weights, block=block)
-    elif (prepared.plan != plan or prepared.block != block
-          or prepared.x_dim != x.shape[-1]
-          or len(prepared.weights) != len(weights)
-          or any(got is not want for got, want
-                 in zip(prepared.weights, weights))):
+    elif _prepared_is_stale(prepared, plan, block, weights) \
+            or prepared.x_dim != x.shape[-1]:
         raise PlanError("prepared= was built from a different "
                         "(plan, weights, block) than this call's arguments")
     return prepared(x, activation=activation, use_pallas=use_pallas)
@@ -226,3 +266,362 @@ def execute_plan_reference(plan: ExecutionPlan, x: jax.Array,
             cur = activation(cur)
     return invert_block_perm(cur, perms[-1], block) \
         if len(perms[-1]) > 1 else cur
+
+
+# =========================================================================
+# Whole-network execution: convolutions + residual joins through Pallas
+# =========================================================================
+def adapt_activation(a: jax.Array, H: int, W: int, C: int) -> jax.Array:
+    """Deterministic boundary adapter between sampled (non-chaining) layers.
+
+    The evaluation graphs sample one layer per stage, so consecutive
+    workloads need not tile exactly: spatial dims shrink across stages
+    (pooling is not modeled as a layer) and SAME-padded 3x3/5x5 layers want
+    an input slightly LARGER than the previous output.  The adapter is the
+    fixed semantic both the executor and the reference oracle implement:
+
+    * spatial larger-than-wanted: integer-stride subsample then crop
+      (the pooling stand-in),
+    * spatial smaller-than-wanted: symmetric zero pad (SAME padding),
+    * channels: truncate or zero-pad at the end (projection-free bridge).
+    """
+    N, h, w, c = a.shape
+    if h > H:
+        a = a[:, ::h // H, :, :][:, :H]
+    elif h < H:
+        lo = (H - h) // 2
+        a = jnp.pad(a, ((0, 0), (lo, H - h - lo), (0, 0), (0, 0)))
+    if w > W:
+        a = a[:, :, ::w // W, :][:, :, :W]
+    elif w < W:
+        lo = (W - w) // 2
+        a = jnp.pad(a, ((0, 0), (0, 0), (lo, W - w - lo), (0, 0)))
+    if c > C:
+        a = a[..., :C]
+    elif c < C:
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, 0), (0, C - c)))
+    return a
+
+
+def _adapt_src_coords(coords: np.ndarray, have: int, want: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Index form of the spatial half of ``adapt_activation``: for canvas
+    coordinates in [0, want) return (source index, in-bounds mask)."""
+    if have > want:
+        return coords * (have // want), np.ones_like(coords, bool)
+    if have < want:
+        lo = (want - have) // 2
+        c = coords - lo
+        return np.clip(c, 0, have - 1), (c >= 0) & (c < have)
+    return coords, np.ones_like(coords, bool)
+
+
+@functools.lru_cache(maxsize=1024)
+def _patch_row_map(N: int, h_in: int, w_in: int, H: int, W: int,
+                   P: int, Q: int, R: int, S: int, stride: int) -> np.ndarray:
+    """Fused (boundary adapter ∘ im2col) row gather.
+
+    Maps each output position x tap to a flat row of the producer's stored
+    2D activation ``(N*h_in*w_in, F)``; out-of-bounds (SAME-pad) taps point
+    at the appended zero row ``N*h_in*w_in``.  Returns (N*P*Q, R*S) int32.
+    """
+    h = np.arange(P)[:, None] * stride + np.arange(R)[None, :]      # (P, R)
+    w = np.arange(Q)[:, None] * stride + np.arange(S)[None, :]      # (Q, S)
+    src_h, ok_h = _adapt_src_coords(h, h_in, H)
+    src_w, ok_w = _adapt_src_coords(w, w_in, W)
+    n = np.arange(N)[:, None, None, None, None]
+    rows = ((n * h_in + src_h[None, :, None, :, None]) * w_in
+            + src_w[None, None, :, None, :])                # (N, P, Q, R, S)
+    ok = ok_h[None, :, None, :, None] & ok_w[None, None, :, None, :]
+    rows = np.where(ok, rows, N * h_in * w_in)
+    return np.ascontiguousarray(
+        rows.reshape(N * P * Q, R * S).astype(np.int32))
+
+
+def _stored_col_canon(perm: Tuple[int, ...], width: int,
+                      block: int) -> np.ndarray:
+    """Canonical channel held by each stored column of a boundary tensor."""
+    if len(perm) > 1:
+        return _gather_indices(perm, block)
+    return np.arange(width, dtype=np.int64)
+
+
+def _effective_conv_weight(wl, w: jax.Array, in_width: int,
+                           in_perm: Tuple[int, ...], block: int) -> jax.Array:
+    """Dense (taps*in_width, M) weight aligned to the producer's stored cols.
+
+    Folds three things into one offline tensor: the im2col weight reshape,
+    the boundary-layout K-block alignment (the stored column j holds
+    canonical channel ``gidx[j]``), and the channel half of the boundary
+    adapter (stored channels beyond the layer's fan-in get zero rows, so
+    truncation costs nothing at runtime; missing channels simply have no
+    column).  Depthwise layers use the block-diagonal dense form.
+    """
+    taps = wl.R * wl.S
+    c_eff = input_channels(wl)
+    w = jnp.asarray(w, jnp.float32)
+    if is_depthwise(wl):
+        flat = w.reshape(taps, wl.M)                        # (taps, M)
+        canon = jnp.zeros((taps, c_eff, wl.M), jnp.float32)
+        idx = jnp.arange(wl.M)
+        canon = canon.at[:, idx, idx].set(flat)
+    else:
+        if w.ndim == 2:                                     # squeezed 1x1
+            w = w.reshape(wl.R, wl.S, wl.C, wl.M)
+        canon = w.reshape(taps, c_eff, wl.M)
+    gidx = _stored_col_canon(in_perm, in_width, block)
+    valid = gidx < c_eff
+    safe = np.where(valid, np.minimum(gidx, c_eff - 1), 0)
+    w_eff = canon[:, safe, :] * jnp.asarray(valid, jnp.float32)[None, :, None]
+    return w_eff.reshape(taps * in_width, wl.M)
+
+
+def _pad_axis(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@dataclasses.dataclass
+class _JoinExec:
+    """Resolved execution of one skip join at a step's output boundary."""
+
+    src: int
+    fused: bool                    # stored shapes+perms agree: epilogue add
+    src_perm: Tuple[int, ...]
+    src_shape: Tuple[int, int, int, int]       # (N, P, Q, M) of the source
+
+
+@dataclasses.dataclass
+class _NetStep:
+    """Everything layer execution needs, derived once at prepare time."""
+
+    wl: object
+    row_map: Optional[jax.Array]   # None = pure GEMM passthrough
+    w_eff: jax.Array               # (K_pad, M_pad) kernel-ready weight
+    k_width: int                   # taps * in_width (pre-pad)
+    rows_out: int
+    out_perm: Tuple[int, ...]
+    joins: Tuple[_JoinExec, ...]
+    out_shape: Tuple[int, int, int, int]       # (N, P, Q, M)
+
+
+class PreparedNetwork:
+    """``execute_network``'s per-(plan, graph, weights) setup, hoisted.
+
+    Derives every boundary's block permutation, every layer's fused
+    (adapter ∘ im2col) patch-gather row map, the layout-aligned effective
+    weights, and the resolved join strategy — so a serving loop pays only
+    the per-batch gathers and matmuls.
+    """
+
+    def __init__(self, plan: ExecutionPlan, graph: LayerGraph,
+                 weights: Sequence[jax.Array], *, block: int = RIR_BLOCK):
+        if len(plan.steps) != len(graph.layers):
+            raise PlanError(f"plan has {len(plan.steps)} steps for "
+                            f"{len(graph.layers)}-layer graph")
+        if len(weights) != len(graph.layers):
+            raise PlanError(f"{len(weights)} weights for "
+                            f"{len(graph.layers)} layers")
+        for step, wl in zip(plan.steps, graph.layers):
+            if step.workload.dims() != wl.dims() or \
+                    step.workload.stride != wl.stride:
+                raise PlanError(f"plan step {step.layer} does not match "
+                                f"graph layer {wl.name}")
+        self.plan = plan
+        self.graph = graph
+        self.block = block
+        self.weights = tuple(weights)
+        self.input_shape = graph.input_shape()
+
+        # boundary feature widths + block perms: boundary 0 is the network
+        # input, boundary i+1 carries layer i's output
+        widths = [input_channels(graph.layers[0])] + \
+            [wl.M for wl in graph.layers]
+        self.perms: List[Tuple[int, ...]] = \
+            _derive_boundary_perms(plan, widths, block)
+
+        self.steps: List[_NetStep] = []
+        for i, (step, wl, w) in enumerate(zip(plan.steps, graph.layers,
+                                              weights)):
+            in_width = widths[i]
+            shape = weight_shape(wl)
+            got = tuple(jnp.shape(w))
+            if got not in (shape, shape[-2:] if wl.R == wl.S == 1 else shape):
+                raise PlanError(f"layer {wl.name}: weight shape {got} != "
+                                f"expected {shape}")
+            prev_wl = graph.layers[i - 1] if i > 0 else None
+            h_in, w_in = (prev_wl.P, prev_wl.Q) if prev_wl else \
+                (wl.H, wl.W)
+            passthrough = (wl.R == 1 and wl.S == 1 and wl.stride == 1
+                           and h_in == wl.H and w_in == wl.W)
+            row_map = None if passthrough else jnp.asarray(_patch_row_map(
+                wl.N, h_in, w_in, wl.H, wl.W, wl.P, wl.Q, wl.R, wl.S,
+                wl.stride))
+            w_eff = _effective_conv_weight(wl, w, in_width, self.perms[i],
+                                           block)
+            w_eff = _pad_axis(_pad_axis(w_eff, block, 0), block, 1)
+            out_perm = self.perms[i + 1]
+            rows_out = wl.N * wl.P * wl.Q
+            joins = []
+            for j in step.joins:
+                src = j.src
+                if not 0 <= src < i:
+                    raise PlanError(f"step {step.layer}: bad join src {src}")
+                swl = graph.layers[src]
+                fused = (swl.P, swl.Q) == (wl.P, wl.Q) and swl.M == wl.M \
+                    and self.perms[src + 1] == out_perm and swl.N == wl.N
+                joins.append(_JoinExec(
+                    src=src, fused=fused, src_perm=self.perms[src + 1],
+                    src_shape=(swl.N, swl.P, swl.Q, swl.M)))
+            self.steps.append(_NetStep(
+                wl=wl, row_map=row_map, w_eff=w_eff,
+                k_width=wl.R * wl.S * in_width, rows_out=rows_out,
+                out_perm=out_perm, joins=tuple(joins),
+                out_shape=(wl.N, wl.P, wl.Q, wl.M)))
+        self._buffer_set = set(graph.buffer_sources())
+
+    # ------------------------------------------------------------- execution
+    def _join_term(self, st: _NetStep, je: _JoinExec, buf: jax.Array,
+                   block: int) -> jax.Array:
+        """Bring a buffered skip tensor into this step's output layout.
+
+        Fused joins return the buffer unchanged (already concordant); the
+        relayout path canonicalizes, runs the boundary adapter, and re-stores
+        in the consumer's layout — the pass the planner costed as
+        ``JoinSpec.relayout``.
+        """
+        if je.fused:
+            return buf
+        canon = invert_block_perm(buf, je.src_perm, block) \
+            if len(je.src_perm) > 1 else buf
+        canon = canon.reshape(je.src_shape)
+        N, P, Q, M = st.out_shape
+        canon = adapt_activation(canon, P, Q, M).reshape(N * P * Q, M)
+        return apply_block_perm(canon, st.out_perm, block) \
+            if len(st.out_perm) > 1 else canon
+
+    def __call__(self, x: jax.Array, *,
+                 activation: Optional[Callable[[jax.Array], jax.Array]] = None,
+                 use_pallas: bool = True) -> jax.Array:
+        block = self.block
+        N, H, W, C = self.input_shape
+        a = adapt_activation(jnp.asarray(x, jnp.float32), H, W, C)
+        if a.shape[0] != N:
+            raise PlanError(f"batch {a.shape[0]} != planned N={N}")
+        cur = a.reshape(N * H * W, C)
+        if len(self.perms[0]) > 1:
+            cur = apply_block_perm(cur, self.perms[0], block)
+        buffers: Dict[int, jax.Array] = {}
+        last = len(self.steps) - 1
+        for i, st in enumerate(self.steps):
+            if st.row_map is None:
+                patches = cur
+            else:
+                padded = jnp.concatenate(
+                    [cur, jnp.zeros((1, cur.shape[1]), cur.dtype)])
+                patches = padded[st.row_map].reshape(
+                    st.rows_out, st.k_width)
+            patches = _pad_axis(_pad_axis(patches, block, 0), block, 1)
+            fused_res = None
+            for je in st.joins:
+                if not je.fused:
+                    continue
+                term = buffers[je.src]
+                fused_res = term if fused_res is None else fused_res + term
+            out_perm = st.out_perm if len(st.out_perm) > 1 else None
+            if use_pallas:
+                res_pad = None
+                if fused_res is not None:
+                    res_pad = _pad_axis(_pad_axis(fused_res, block, 0),
+                                        block, 1)
+                y = ops.rir_matmul(patches, st.w_eff, out_perm,
+                                   residual=res_pad, block_m=block,
+                                   block_n=block, block_k=block)
+            else:
+                y = jnp.dot(patches, st.w_eff,
+                            preferred_element_type=jnp.float32)
+                if out_perm is not None:
+                    y = apply_block_perm(y, out_perm, block)
+                if fused_res is not None:
+                    y = y + _pad_axis(_pad_axis(fused_res, block, 0),
+                                      block, 1)
+            y = y[:st.rows_out, :st.wl.M]
+            for je in st.joins:
+                if je.fused:
+                    continue
+                y = y + self._join_term(st, je, buffers[je.src], block)
+            if activation is not None and i < last:
+                y = activation(y)
+            if i in self._buffer_set:
+                buffers[i] = y
+            cur = y
+        out_perm = self.perms[-1]
+        if len(out_perm) > 1:
+            cur = invert_block_perm(cur, out_perm, block)
+        return cur.reshape(self.steps[-1].out_shape)
+
+
+def prepare_network(plan: ExecutionPlan, graph: LayerGraph,
+                    weights: Sequence[jax.Array], *,
+                    block: int = RIR_BLOCK) -> PreparedNetwork:
+    """Hoist gathers/weights/join strategy out of the per-batch path."""
+    return PreparedNetwork(plan, graph, weights, block=block)
+
+
+def execute_network(plan: ExecutionPlan, graph: LayerGraph, x: jax.Array,
+                    weights: Sequence[jax.Array], *, block: int = RIR_BLOCK,
+                    activation: Optional[Callable] = None,
+                    use_pallas: bool = True,
+                    prepared: Optional[PreparedNetwork] = None) -> jax.Array:
+    """Execute a complete planned ``LayerGraph`` — convs, depthwise layers
+    and residual joins included; no layer falls back to the reference path.
+
+    x: canonical NHWC input (run through the boundary adapter if it does not
+    match ``graph.input_shape()`` exactly).  Returns the last layer's output
+    in canonical NHWC order.  Intermediate activations only ever exist in
+    their planned boundary layouts; each conv's patch gather reads the
+    producer's stored order directly and each epilogue writes the consumer's.
+    """
+    if prepared is None:
+        prepared = PreparedNetwork(plan, graph, weights, block=block)
+    elif _prepared_is_stale(prepared, plan, block, weights) \
+            or prepared.graph != graph:
+        raise PlanError("prepared= was built from a different "
+                        "(plan, graph, weights, block) than this call")
+    return prepared(x, activation=activation, use_pallas=use_pallas)
+
+
+def execute_network_reference(graph: LayerGraph, x: jax.Array,
+                              weights: Sequence[jax.Array], *,
+                              activation: Optional[Callable] = None
+                              ) -> jax.Array:
+    """Canonical-layout oracle for ``execute_network``.
+
+    Pure ``kernels/ref.py`` conv/depthwise semantics plus the same boundary
+    adapter and residual joins; no layouts, no plans — every valid plan for
+    ``graph`` must reproduce this function's output.
+    """
+    outs: List[jax.Array] = []
+    cur = jnp.asarray(x, jnp.float32)
+    last = len(graph.layers) - 1
+    for i, (wl, w) in enumerate(zip(graph.layers, weights)):
+        a = adapt_activation(cur, wl.H, wl.W, input_channels(wl))
+        w = jnp.asarray(w, jnp.float32)
+        if is_depthwise(wl):
+            y = ref.depthwise_conv2d(a, w, wl.stride)
+        else:
+            if w.ndim == 2:
+                w = w.reshape(wl.R, wl.S, wl.C, wl.M)
+            y = ref.conv2d(a, w, wl.stride)
+        for src in graph.skips_into(i):
+            y = y + adapt_activation(outs[src], wl.P, wl.Q, wl.M)
+        if activation is not None and i < last:
+            y = activation(y)
+        outs.append(y)
+        cur = y
+    return outs[-1]

@@ -20,8 +20,8 @@ import hashlib
 from typing import List, Sequence, Tuple
 
 from repro.core.dataflow import ConvWorkload
-from repro.core.workloads import (bert_layers, mobilenet_v3_layers,
-                                  resnet50_layers)
+from repro.core.workloads import (bert_layers, input_channels,
+                                  mobilenet_v3_layers, resnet50_layers)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +48,16 @@ class LayerGraph:
     def skips_into(self, dst: int) -> List[int]:
         """Sources of skip edges landing at layer ``dst``."""
         return [s for s, d in self.skip_edges if d == dst]
+
+    def buffer_sources(self) -> List[int]:
+        """Layers whose output the executor must buffer (skip-edge sources),
+        in execution order — everything else is dead after its consumer."""
+        return sorted({s for s, _ in self.skip_edges})
+
+    def input_shape(self) -> Tuple[int, int, int, int]:
+        """Canonical NHWC input tensor shape the first layer reads."""
+        wl = self.layers[0]
+        return (wl.N, wl.H, wl.W, input_channels(wl))
 
     def graph_hash(self) -> str:
         """Stable content hash — the plan-cache key component."""

@@ -13,7 +13,7 @@ import dataclasses
 import hashlib
 import json
 import pathlib
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.dataflow import ConvWorkload, Dataflow
 from repro.core.layoutloop import EvalConfig
@@ -74,6 +74,33 @@ def layout_block_perm(layout_name: str, n_blocks: int) -> Tuple[int, ...]:
 
 # -------------------------------------------------------------------- the plan
 @dataclasses.dataclass(frozen=True)
+class JoinSpec:
+    """A residual/skip join landing at this step's *output* boundary.
+
+    ``src`` indexes the producing layer; its buffered activation is stored in
+    ``src_layout`` (the boundary layout the planner chose for boundary
+    ``src + 1``).  ``relayout`` is how the tensor is brought into this step's
+    output layout: ``"none"`` when the boundaries already agree (the add
+    fuses into the consumer's epilogue for free), otherwise the planner's
+    residual reorder mode (``offchip`` / RAR variants / ``rir``), whose cost
+    the search already charged.
+    """
+
+    src: int
+    src_layout: str
+    relayout: str = "none"
+
+    def to_dict(self) -> Dict:
+        return {"src": self.src, "src_layout": self.src_layout,
+                "relayout": self.relayout}
+
+    @staticmethod
+    def from_dict(d: Dict) -> "JoinSpec":
+        return JoinSpec(src=int(d["src"]), src_layout=d["src_layout"],
+                        relayout=d["relayout"])
+
+
+@dataclasses.dataclass(frozen=True)
 class PlanStep:
     """One layer's planned execution."""
 
@@ -87,6 +114,8 @@ class PlanStep:
     epilogue_perm: Optional[Tuple[int, ...]]   # None = identity / not GEMM-able
     cycles: float
     energy_pj: float
+    lowering: str = "gemm"         # gemm | im2col | depthwise (K-side transform)
+    joins: Tuple[JoinSpec, ...] = ()   # skip edges adding at the out boundary
 
     def to_dict(self) -> Dict:
         return {"layer": self.layer,
@@ -96,7 +125,9 @@ class PlanStep:
                 "reorder": self.reorder, "kernel": self.kernel,
                 "epilogue_perm": (list(self.epilogue_perm)
                                   if self.epilogue_perm is not None else None),
-                "cycles": self.cycles, "energy_pj": self.energy_pj}
+                "cycles": self.cycles, "energy_pj": self.energy_pj,
+                "lowering": self.lowering,
+                "joins": [j.to_dict() for j in self.joins]}
 
     @staticmethod
     def from_dict(d: Dict) -> "PlanStep":
@@ -107,7 +138,9 @@ class PlanStep:
             reorder=d["reorder"], kernel=d["kernel"],
             epilogue_perm=(tuple(int(p) for p in d["epilogue_perm"])
                            if d["epilogue_perm"] is not None else None),
-            cycles=float(d["cycles"]), energy_pj=float(d["energy_pj"]))
+            cycles=float(d["cycles"]), energy_pj=float(d["energy_pj"]),
+            lowering=d.get("lowering", "gemm"),
+            joins=tuple(JoinSpec.from_dict(j) for j in d.get("joins", ())))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -26,14 +26,15 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.dataflow import ConvWorkload, Dataflow, enumerate_dataflows
+from repro.core.dataflow import Dataflow, enumerate_dataflows
 from repro.core.layout import Layout, conv_layout_space
 from repro.core.layoutloop import (EvalConfig, LatticeMetrics, Metrics,
                                    evaluate, evaluate_lattice,
                                    reorder_overhead)
+from repro.core.workloads import is_depthwise
 
 from .graph import LayerGraph
-from .plan import (RIR_BLOCK, ExecutionPlan, PlanStep, config_key,
+from .plan import (RIR_BLOCK, ExecutionPlan, JoinSpec, PlanStep, config_key,
                    layout_block_perm)
 
 
@@ -220,6 +221,17 @@ class NetworkPlanner:
             self._skip_memo[src] = hit
         return hit
 
+    def skip_shapes_agree(self, src: int, dst: int) -> bool:
+        """True when the skip tensor can join ``dst``'s output tile-for-tile.
+
+        Mirrors the executor's fusion condition: a residual add only fuses
+        into the consumer's epilogue when the two tensors share (N, P, Q, M);
+        otherwise the boundary adapter must run a standalone pass regardless
+        of layout agreement, and the planner must charge for it.
+        """
+        a, b = self.graph.layers[src], self.graph.layers[dst]
+        return (a.N, a.P, a.Q, a.M) == (b.N, b.P, b.Q, b.M)
+
     # ------------------------------------------------------------ path scoring
     def extend(self, path: _Path, layer: int, l_out: Layout) -> _Path:
         """Append layer ``layer`` with output boundary ``l_out``."""
@@ -231,8 +243,12 @@ class NetworkPlanner:
         trans = path.transition_cycles + c.metrics.reorder_cycles
         for src in self.graph.skips_into(layer):
             # boundary index src+1 carries layers[src]'s output; the skip
-            # tensor is re-read at this layer's input boundary
-            if path.boundaries[src + 1] != path.boundaries[layer]:
+            # tensor joins (residual add) at this layer's OUTPUT boundary —
+            # the add fuses into the producing epilogue for free only when
+            # layouts AND shapes agree; otherwise the tensor pays a
+            # relayout/adapter pass (the executor's exact fusion condition)
+            if path.boundaries[src + 1] != l_out.name() \
+                    or not self.skip_shapes_agree(src, layer):
                 pc, pe = self.skip_penalty(src)
                 key += _overhead_key(pc, pe, self.opts.objective)
                 cycles += pc
@@ -322,19 +338,30 @@ class NetworkPlanner:
         steps = []
         for i, (wl, choice) in enumerate(zip(self.graph.layers, path.choices)):
             l_in, l_out = path.boundaries[i], path.boundaries[i + 1]
-            gemm_like = wl.R == 1 and wl.S == 1 and wl.stride == 1
-            n_blocks = wl.M // RIR_BLOCK if wl.M % RIR_BLOCK == 0 else 0
-            if gemm_like and n_blocks >= 1:
-                kernel = "rir_matmul"
-                perm = layout_block_perm(l_out, n_blocks)
+            # every layer lowers to the RIR matmul: GEMM-able layers feed it
+            # directly, convolutions through the layout-aware im2col gather
+            # (depthwise via the block-diagonal dense form) — no layer falls
+            # back to the reference matmul path anymore
+            if is_depthwise(wl):
+                lowering = "depthwise"
+            elif wl.R == 1 and wl.S == 1 and wl.stride == 1:
+                lowering = "gemm"
             else:
-                kernel = "ref"
-                perm = None
+                lowering = "im2col"
+            n_blocks = wl.M // RIR_BLOCK if wl.M % RIR_BLOCK == 0 else 0
+            perm = layout_block_perm(l_out, n_blocks) if n_blocks >= 1 else None
+            joins = tuple(
+                JoinSpec(src=src, src_layout=path.boundaries[src + 1],
+                         relayout=("none"
+                                   if path.boundaries[src + 1] == l_out
+                                   and self.skip_shapes_agree(src, i)
+                                   else self.opts.residual_mode))
+                for src in self.graph.skips_into(i))
             steps.append(PlanStep(
                 layer=wl.name, workload=wl, dataflow=choice.dataflow,
                 in_layout=l_in, out_layout=l_out, reorder=choice.mode,
-                kernel=kernel, epilogue_perm=perm,
-                cycles=choice.metrics.cycles,
+                kernel="rir_matmul", epilogue_perm=perm, lowering=lowering,
+                joins=joins, cycles=choice.metrics.cycles,
                 energy_pj=choice.metrics.energy_pj))
         return ExecutionPlan(
             graph_name=self.graph.name, graph_hash=self.graph.graph_hash(),

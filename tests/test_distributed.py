@@ -3,7 +3,6 @@
 Multi-device cases run in subprocesses so the 512-device XLA flag never
 leaks into this process (per the dry-run isolation requirement).
 """
-import json
 import os
 import subprocess
 import sys

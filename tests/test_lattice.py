@@ -105,6 +105,7 @@ def test_lattice_matches_scalar_paper_layers():
 
 
 if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
     @settings(max_examples=12, deadline=None)
     @given(st.integers(4, 128), st.integers(4, 128), st.integers(4, 32),
            st.integers(4, 32), st.sampled_from([1, 3, 5]),
@@ -180,6 +181,7 @@ def test_planner_table_path_emits_identical_plan_json(graph_fn, modes):
 
 
 # --------------------------------------------------------------- CI speed guard
+@pytest.mark.slow
 def test_mobv3_full_plan_under_wall_time_budget():
     """Regression guard: a scalar-path fallback would take ~14s; the lattice
     path takes well under a second.  60s is generous for any sane machine."""

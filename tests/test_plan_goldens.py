@@ -1,0 +1,74 @@
+"""Plan-golden drift check: the committed ``ExecutionPlan`` artifacts for
+resnet50 / mobilenet_v3 / bert must be byte-identical to a fresh re-plan.
+
+The plan JSON transitively fingerprints the whole cost model (per-layer
+cycles/energy, boundary layout choices, reorder modes, join relayouts, the
+``config_key`` hash of ``EvalConfig`` + planner options), so ANY silent
+cost-model or search change fails here and forces a deliberate golden
+update.  To regenerate after an intentional change:
+
+    PYTHONPATH=src python tests/test_plan_goldens.py --regen
+
+and commit the diff under ``tests/goldens/`` together with the change that
+caused it.
+"""
+import pathlib
+import sys
+
+import pytest
+
+from repro.core.layout import Layout
+from repro.core.layoutloop import EvalConfig
+from repro.plan import (NetworkPlanner, PlannerOptions, bert_graph,
+                        mobilenet_v3_graph, resnet50_graph)
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "goldens"
+
+# frozen planning spec: small layout set + both switch implementations so the
+# goldens cover layout choice, reorder choice, AND join relayout emission
+GOLDEN_LAYOUTS = tuple(Layout.parse(s)
+                       for s in ("HWC_C32", "HWC_H32", "HWC_C4W8"))
+GOLDEN_OPTS = PlannerOptions(switch_modes=("rir", "offchip"),
+                             layouts=GOLDEN_LAYOUTS,
+                             parallel_dims=("C", "P", "Q"))
+
+GRAPHS = {
+    "resnet50": resnet50_graph,
+    "mobilenet_v3": mobilenet_v3_graph,
+    "bert": lambda: bert_graph(layers_sampled=1),
+}
+
+
+def replan(name: str) -> str:
+    graph = GRAPHS[name]()
+    return NetworkPlanner(graph, EvalConfig(), GOLDEN_OPTS).plan().to_json()
+
+
+@pytest.mark.parametrize("name", sorted(GRAPHS))
+def test_plan_matches_committed_golden(name):
+    path = GOLDEN_DIR / f"plan_{name}.json"
+    assert path.exists(), (
+        f"missing golden {path}; generate with "
+        f"PYTHONPATH=src python tests/test_plan_goldens.py --regen")
+    got = replan(name)
+    want = path.read_text()
+    assert got == want, (
+        f"ExecutionPlan for {name} drifted from {path}.\n"
+        f"If the cost-model/search change is intentional, regenerate via "
+        f"PYTHONPATH=src python tests/test_plan_goldens.py --regen and "
+        f"commit the golden update with it.")
+
+
+def regen() -> None:
+    GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    for name in sorted(GRAPHS):
+        path = GOLDEN_DIR / f"plan_{name}.json"
+        path.write_text(replan(name))
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        regen()
+    else:
+        print(__doc__)

@@ -1,5 +1,4 @@
 """Data pipeline, optimizer, checkpointing, fault-tolerance runtime."""
-import pathlib
 
 import jax
 import jax.numpy as jnp

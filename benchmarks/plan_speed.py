@@ -15,10 +15,10 @@ import json
 import pathlib
 import time
 
-from repro.core.dataflow import enumerate_dataflows
+from repro.core.dataflow import enumerate_dataflows, enumerate_tilings
 from repro.core.layout import conv_layout_space
 from repro.core.layoutloop import EvalConfig, evaluate, evaluate_lattice
-from repro.core.workloads import mobilenet_v3_layers
+from repro.core.workloads import mobilenet_v3_layers, resnet50_layers
 from repro.plan import NetworkPlanner, PlannerOptions, mobilenet_v3_graph, \
     resnet50_graph
 
@@ -27,8 +27,14 @@ from .common import emit
 BENCH_PATH = pathlib.Path(__file__).resolve().parents[1] / \
     "BENCH_plan_speed.json"
 MODES = ("none", "rir", "offchip")
+# the lattice-vs-scalar identity comparison stays on the untiled space (the
+# scalar sweep over the tiled space would take minutes); the tile axis gets
+# its own sweep + plan entries below
 PLANNER_OPTS = PlannerOptions(switch_modes=("rir", "offchip"),
-                              parallel_dims=("C", "P", "Q"))
+                              parallel_dims=("C", "P", "Q"),
+                              search_tiles=False)
+TILED_OPTS = PlannerOptions(switch_modes=("rir", "offchip"),
+                            parallel_dims=("C", "P", "Q"))
 
 
 def bench_layer_sweep(cfg: EvalConfig) -> dict:
@@ -44,10 +50,29 @@ def bench_layer_sweep(cfg: EvalConfig) -> dict:
     t0 = time.perf_counter()
     lat = evaluate_lattice(wl, dfs, layouts, MODES, cfg)
     t_lattice = time.perf_counter() - t0
-    assert lat.shape == (len(dfs), len(layouts), len(MODES))
+    assert lat.shape == (len(dfs), 1, len(layouts), len(MODES))
     return {"layer": wl.name, "points": len(scalar),
             "scalar_s": t_scalar, "lattice_s": t_lattice,
             "speedup": t_scalar / t_lattice}
+
+
+def bench_tiled_sweep(cfg: EvalConfig) -> dict:
+    """One layer's full 4-D (dataflow x tile x layout x mode) lattice."""
+    wl = resnet50_layers()[8]          # res50-l47-3x3: capacity-bound
+    dfs = list(enumerate_dataflows(wl, cfg.nest.aw * cfg.nest.ah,
+                                   parallel_dims=("C", "P", "Q")))
+    cap = cfg.buffer.num_lines * cfg.buffer.line_size * cfg.dtype_bytes
+    tilings = list(enumerate_tilings(wl, None, cap, cfg.dtype_bytes))
+    layouts = conv_layout_space()
+    t0 = time.perf_counter()
+    lat = evaluate_lattice(wl, dfs, layouts, MODES, cfg, tilings=tilings)
+    t_lattice = time.perf_counter() - t0
+    points = len(dfs) * len(tilings) * len(layouts) * len(MODES)
+    assert lat.shape == (len(dfs), len(tilings), len(layouts), len(MODES))
+    edp = lat.key("edp")
+    return {"layer": wl.name, "points": points, "tilings": len(tilings),
+            "lattice_s": t_lattice, "us_per_point": t_lattice / points * 1e6,
+            "edp_gain_vs_untiled": float(edp[:, 0].min() / edp.min())}
 
 
 def bench_plan(graph, cfg: EvalConfig) -> dict:
@@ -65,6 +90,20 @@ def bench_plan(graph, cfg: EvalConfig) -> dict:
             "identical_json": True, "total_cycles": fast.total_cycles}
 
 
+def bench_tiled_plan(graph, cfg: EvalConfig) -> dict:
+    """End-to-end joint (dataflow x tile x layout) planning vs untiled."""
+    t0 = time.perf_counter()
+    tiled = NetworkPlanner(graph, cfg, TILED_OPTS).plan()
+    t_tiled = time.perf_counter() - t0
+    untiled = NetworkPlanner(graph, cfg, PLANNER_OPTS).plan()
+    assert tiled.total_cycles <= untiled.total_cycles, graph.name
+    return {"layers": len(graph), "tiled_s": t_tiled,
+            "tiled_cycles": tiled.total_cycles,
+            "untiled_cycles": untiled.total_cycles,
+            "cycles_gain": untiled.total_cycles / tiled.total_cycles,
+            "tiled_steps": sum(1 for s in tiled.steps if s.tiles)}
+
+
 def run() -> dict:
     cfg = EvalConfig()
     entry = {
@@ -73,9 +112,14 @@ def run() -> dict:
                 "tables; the cold pre-refactor mobilenet_v3 baseline was ~14s",
         "switch_modes": list(PLANNER_OPTS.switch_modes),
         "layer_sweep": bench_layer_sweep(cfg),
+        "tiled_sweep": bench_tiled_sweep(cfg),
         "plan": {
             "mobilenet_v3": bench_plan(mobilenet_v3_graph(), cfg),
             "resnet50": bench_plan(resnet50_graph(), cfg),
+        },
+        "plan_tiled": {
+            "mobilenet_v3": bench_tiled_plan(mobilenet_v3_graph(), cfg),
+            "resnet50": bench_tiled_plan(resnet50_graph(), cfg),
         },
     }
     return entry
@@ -95,11 +139,19 @@ def main() -> dict:
     save(entry)
     rows = [("plan_speed.layer_sweep", entry["layer_sweep"]["lattice_s"] * 1e6,
              f"us;points={entry['layer_sweep']['points']};"
-             f"speedup_vs_scalar={entry['layer_sweep']['speedup']:.1f}x")]
+             f"speedup_vs_scalar={entry['layer_sweep']['speedup']:.1f}x"),
+            ("plan_speed.tiled_sweep", entry["tiled_sweep"]["lattice_s"] * 1e6,
+             f"us;points={entry['tiled_sweep']['points']};"
+             f"tilings={entry['tiled_sweep']['tilings']};"
+             f"edp_gain={entry['tiled_sweep']['edp_gain_vs_untiled']:.2f}x")]
     for net, r in entry["plan"].items():
         rows.append((f"plan_speed.{net}", r["lattice_s"] * 1e6,
                      f"us;scalar_s={r['scalar_s']:.2f};"
                      f"speedup_vs_scalar={r['speedup']:.1f}x"))
+    for net, r in entry["plan_tiled"].items():
+        rows.append((f"plan_speed.tiled.{net}", r["tiled_s"] * 1e6,
+                     f"us;cycles_gain_vs_untiled={r['cycles_gain']:.2f}x;"
+                     f"tiled_steps={r['tiled_steps']}/{r['layers']}"))
     emit(rows)
     return entry
 

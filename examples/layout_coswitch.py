@@ -21,6 +21,14 @@ lower to the layout-aware implicit GEMM, skip tensors are buffered in their
 boundary layout and joined per the plan's ``JoinSpec``s — and reproduces the
 canonical reference oracle.
 
+Part 5 — the JOINT (dataflow x tile x layout) co-search: the planner adds
+capacity-feasible on-chip tile sizes as a searched axis of every layer's
+lattice.  Planned-with-tiles vs planned-without is compared on both
+hardware classes (off-chip-only switching, and RIR + off-chip); the tiled
+plan is never worse by construction (the default whole-tensor tiling is
+always a candidate) and wins EDP wherever the untiled working set
+overflows the on-chip buffer.
+
     PYTHONPATH=src python examples/layout_coswitch.py
 """
 import jax.numpy as jnp
@@ -33,7 +41,8 @@ from repro.core.workloads import init_graph_weights, resnet50_layers
 from repro.kernels import ops, ref
 from repro.plan import (ExecutionPlan, NetworkPlanner, PlannerOptions,
                         execute_network, execute_network_reference,
-                        execute_plan, from_layers, resnet50_graph)
+                        execute_plan, from_layers, resnet50_graph,
+                        step_kernel_blocks)
 
 
 def part1_network_planning():
@@ -127,8 +136,39 @@ def part4_full_network_execution():
           f"(no reference fallback); max |err| vs oracle = {err:.2e}")
 
 
+def part5_joint_tile_planning():
+    print("=== Part 5: joint (dataflow x tile x layout) co-search ===")
+    import dataclasses
+    graph = resnet50_graph()
+    cfg = EvalConfig()
+    hardware = {"offchip-only": ("offchip",), "rir+offchip": ("rir", "offchip")}
+    for hw, modes in hardware.items():
+        base = PlannerOptions(switch_modes=modes,
+                              parallel_dims=("C", "P", "Q"),
+                              search_tiles=False)
+        untiled = NetworkPlanner(graph, cfg, base).plan()
+        tiled = NetworkPlanner(
+            graph, cfg, dataclasses.replace(base, search_tiles=True)).plan()
+
+        def edp(p):
+            return p.total_energy_pj * p.total_cycles
+
+        assert tiled.total_cycles <= untiled.total_cycles
+        print(f"  [{hw}] planned-without-tiles: {untiled.total_cycles:.3e} "
+              f"cycles, EDP {edp(untiled):.3e}")
+        print(f"  [{hw}] planned-with-tiles:    {tiled.total_cycles:.3e} "
+              f"cycles, EDP {edp(tiled):.3e}  "
+              f"({edp(untiled) / edp(tiled):.1f}x EDP win, "
+              f"{sum(1 for s in tiled.steps if s.tiles)}/{len(tiled)} "
+              f"layers tiled)")
+        for s in tiled.steps[:4]:
+            print(f"    {s.layer:18s} tile={dict(s.tiles) or 'whole-tensor'} "
+                  f"kernel blocks={step_kernel_blocks(s)}")
+
+
 if __name__ == "__main__":
     part1_network_planning()
     part2_rir_kernels()
     part3_plan_execution()
     part4_full_network_execution()
+    part5_joint_tile_planning()

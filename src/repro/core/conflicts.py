@@ -224,6 +224,42 @@ def assess_iact_conflicts_grid(wl: ConvWorkload, df: Dataflow,
     return out
 
 
+def assess_iact_conflicts_lattice(wl: ConvWorkload,
+                                  dataflows: Sequence[Dataflow],
+                                  tilings: Sequence[Tuple[Tuple[str, int],
+                                                          ...]],
+                                  layouts: Sequence[Layout], buffer: Buffer,
+                                  reliefs: Sequence[str],
+                                  max_samples: int = 16
+                                  ) -> Dict[str, Tuple[np.ndarray,
+                                                       np.ndarray]]:
+    """Concordance statistics over a (dataflow x tiling x layout) lattice.
+
+    Returns ``{relief: (slowdown, avg_lines)}`` with both arrays indexed
+    ``[dataflow, tiling, layout]``.  Each (dataflow, tiling) column is one
+    ``assess_iact_conflicts_grid`` pass over a *tiled* dataflow — the tiling
+    confines the temporal sample bases (``Dataflow.temporal_samples``), so
+    its conflict profile genuinely differs from the untiled one — and every
+    cell is numerically identical to the scalar ``assess_iact_conflicts``
+    call on ``df.with_tiles(tiling)``.
+    """
+    reliefs = tuple(reliefs)
+    nd, nt, nl = len(dataflows), len(tilings), len(layouts)
+    out = {r: (np.ones((nd, nt, nl)), np.zeros((nd, nt, nl)))
+           for r in reliefs}
+    for di, df in enumerate(dataflows):
+        for ti, tiling in enumerate(tilings):
+            df_t = df.with_tiles(tiling) if tiling else df
+            grid = assess_iact_conflicts_grid(wl, df_t, layouts, buffer,
+                                              reliefs, max_samples)
+            for r in reliefs:
+                sd, al = out[r]
+                for li, rep in enumerate(grid[r]):
+                    sd[di, ti, li] = rep.slowdown
+                    al[di, ti, li] = rep.avg_lines_per_cycle
+    return out
+
+
 def concordant(wl: ConvWorkload, df: Dataflow, layout: Layout,
                buffer: Buffer) -> bool:
     return assess_iact_conflicts(wl, df, layout, buffer).concordant

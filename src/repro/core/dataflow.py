@@ -14,7 +14,7 @@ import dataclasses
 import functools
 import itertools
 import math
-from typing import Dict, Iterator, Mapping, Sequence, Tuple
+from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
 
 CONV_DIMS = ("N", "M", "C", "P", "Q", "R", "S")
 GEMM_DIMS = ("M", "N", "K")
@@ -96,7 +96,15 @@ class Dataflow:
     def label(self) -> str:
         if self.name:
             return self.name
-        return "|".join(f"{d}{f}" for d, f in self.spatial)
+        lbl = "|".join(f"{d}{f}" for d, f in self.spatial)
+        if self.tiles:
+            lbl += "@" + "".join(f"{d}{t}" for d, t in self.tiles)
+        return lbl
+
+    def with_tiles(self, tiles: Sequence[Tuple[str, int]]) -> "Dataflow":
+        """The same TOPS point with on-chip tile sizes ``tiles`` (a searched
+        coordinate: distinct tilings are distinct lattice points)."""
+        return dataclasses.replace(self, tiles=tuple(tiles))
 
     # --------------------------------------------------------------- analysis
     def theoretical_utilization(self, wl: ConvWorkload, num_pes: int) -> float:
@@ -139,23 +147,30 @@ class Dataflow:
 
     def temporal_samples(self, wl: ConvWorkload, max_samples: int = 16
                          ) -> Iterator[Dict[str, int]]:
-        """Sample temporal base points (tile origins) for conflict averaging."""
-        dims = wl.dims()
+        """Sample temporal base points (tile origins) for conflict averaging.
+
+        With ``tiles`` set, the temporal sweep is confined to one on-chip
+        tile: bases wrap at the (clamped) tile extent instead of the full
+        dim, so a tiling that keeps the footprint inside few lines shows up
+        as fewer conflicts.  The default (empty) tiling reproduces the
+        untiled sweep exactly.
+        """
+        ext = tile_extents(wl, self)
         sf = self.spatial_factors()
         # iterate innermost temporal dims first for representative samples
-        inner = [d for d in reversed(self.order) if dims[d] > sf.get(d, 1)]
+        inner = [d for d in reversed(self.order) if ext[d] > sf.get(d, 1)]
         count = 0
         steps = [0] * len(inner)
         while count < max_samples:
             base = {}
             for d, s in zip(inner, steps):
-                base[d] = (s * sf.get(d, 1)) % max(1, dims[d])
+                base[d] = (s * sf.get(d, 1)) % max(1, ext[d])
             yield base
             count += 1
             # odometer increment over inner dims
             for i in range(len(inner)):
                 steps[i] += 1
-                limit = max(1, math.ceil(dims[inner[i]] / sf.get(inner[i], 1)))
+                limit = max(1, math.ceil(ext[inner[i]] / sf.get(inner[i], 1)))
                 if steps[i] < limit:
                     break
                 steps[i] = 0
@@ -171,6 +186,123 @@ def _sample_table(df: "Dataflow", wl: ConvWorkload, max_samples: int
     return tuple(df.temporal_samples(wl, max_samples))
 
 
+# ------------------------------------------------------------------- tilings
+def tile_extents(wl: ConvWorkload, df: Dataflow) -> Dict[str, int]:
+    """Effective per-dim on-chip tile sizes for ``(wl, df)``.
+
+    A declared tile is clamped into ``[spatial factor, dim]``: the spatial
+    unrolling must fit inside one tile, and a tile never exceeds the dim.
+    Dims without a declared tile (and the default empty tiling) keep the
+    whole extent on chip — the pre-tiling status quo.
+    """
+    dims = wl.dims()
+    sf = df.spatial_factors()
+    declared = dict(df.tiles)
+    out: Dict[str, int] = {}
+    for d, size in dims.items():
+        want = declared.get(d, size)
+        out[d] = max(min(size, want), min(size, sf.get(d, 1)))
+    return out
+
+
+def tile_working_set(wl: ConvWorkload, extents: Mapping[str, int]) -> int:
+    """On-chip words one tile of each tensor occupies simultaneously."""
+    t = extents
+    h = (t["P"] - 1) * wl.stride + t["R"]
+    w = (t["Q"] - 1) * wl.stride + t["S"]
+    iact = t["N"] * t["C"] * h * w
+    wgt = t["M"] * t["C"] * t["R"] * t["S"]
+    oact = t["N"] * t["M"] * t["P"] * t["Q"]
+    return iact + wgt + oact
+
+
+def tile_traffic_words(wl: ConvWorkload, extents: Mapping[str, int]) -> float:
+    """Off-chip words moved for the whole layer under a tiling.
+
+    Classic tiled-nest reuse accounting (MAESTRO-style): a tensor is
+    re-fetched once per outer-tile iteration over every dim it does NOT
+    depend on, and partial oAct sums round-trip once per revisit of the
+    reduction dims.  The whole-tensor default tiling has every multiplier at
+    1 and reduces to one pass over each tensor — today's untiled traffic.
+    """
+    dims = wl.dims()
+    n = {d: math.ceil(dims[d] / extents[d]) for d in dims}
+    iact_words = math.prod(wl.iact_dims().values())
+    w_words = math.prod(wl.weight_dims().values())
+    oact_words = math.prod(wl.oact_dims().values())
+    m_iact = n["M"]                                  # iActs reread per M tile
+    m_w = n["N"] * n["P"] * n["Q"]                   # weights per output tile
+    m_oact = n["C"] * n["R"] * n["S"]                # partial-sum round trips
+    return (iact_words * m_iact + w_words * m_w
+            + oact_words * (2 * m_oact - 1))
+
+
+def enumerate_tilings(wl: ConvWorkload, df: Optional[Dataflow],
+                      buffer_bytes: int, dtype_bytes: int = 1,
+                      tile_dims: Sequence[str] = ("M", "C", "P", "Q"),
+                      max_tilings: int = 8
+                      ) -> Iterator[Tuple[Tuple[str, int], ...]]:
+    """Pruned on-chip tile-size candidates for one layer.
+
+    Yields the default (whole-tensor) tiling FIRST — searched spaces built
+    from this generator therefore always contain the status quo point, so a
+    tiled co-search is never worse than the untiled one by construction —
+    followed by the *maximal* capacity-feasible power-of-two tilings: a
+    tiling is kept only if no other feasible candidate dominates it
+    (component-wise ≥ tile sizes ⇒ component-wise ≥ reuse), capped at
+    ``max_tilings`` preferring the largest working sets (closest to filling
+    the buffer, i.e. most reuse per byte).
+
+    ``df`` (optional) lower-bounds each dim's tile at its spatial unroll
+    factor; pass ``None`` for a tile axis shared across many dataflows —
+    the cost model clamps per dataflow via ``tile_extents`` anyway.
+    """
+    yield ()   # the default tiling: everything on chip (status quo)
+    dims = wl.dims()
+    sf = df.spatial_factors() if df is not None else {}
+    cap_words = max(1, buffer_bytes // max(1, dtype_bytes))
+    cands: List[List[int]] = []
+    tile_dims = tuple(tile_dims)
+    for d in tile_dims:
+        size = dims[d]
+        lo = min(size, max(1, sf.get(d, 1)))
+        vals = {size}
+        v = 1
+        while v < size:
+            if v >= lo:
+                vals.add(v)
+            v *= 2
+        cands.append(sorted(vals))
+    def ws(combo: Tuple[int, ...]) -> int:
+        ext = dict(dims)
+        ext.update(zip(tile_dims, combo))
+        return tile_working_set(wl, ext)
+
+    nxt = [{v: c[i + 1] for i, v in enumerate(c[:-1])} for c in cands]
+    # keep only maximal (Pareto) tilings: larger tiles always mean ≥ reuse,
+    # so anything dominated by another feasible tiling is dead weight.
+    # Working set is monotone in every tile size, so a feasible combo is
+    # dominated iff bumping some single dim to its next candidate stays
+    # feasible — an O(dims) test instead of an O(candidates^2) sweep.
+    maximal: List[Tuple[int, ...]] = []
+    for combo in itertools.product(*cands):
+        if ws(combo) > cap_words:
+            continue
+        bumped = (combo[:i] + (nxt[i][v],) + combo[i + 1:]
+                  for i, v in enumerate(combo) if v in nxt[i])
+        if all(ws(b) > cap_words for b in bumped):
+            maximal.append(combo)
+
+    maximal.sort(key=lambda c: (-ws(c), c))
+    emitted = {()}
+    for combo in maximal[:max_tilings]:
+        tiling = tuple((d, v) for d, v in zip(tile_dims, combo)
+                       if v < dims[d])
+        if tiling not in emitted:
+            emitted.add(tiling)
+            yield tiling
+
+
 def enumerate_dataflows(wl: ConvWorkload, num_pes: int,
                         max_dims: int = 2,
                         parallel_dims: Sequence[str] = ("M", "C", "P", "Q"),
@@ -178,7 +310,10 @@ def enumerate_dataflows(wl: ConvWorkload, num_pes: int,
     """Generate candidate spatial unrollings for a PE array (pruned TOPS space).
 
     Factors are powers of two up to the array size; at most ``max_dims`` dims
-    are parallelized, mirroring practical accelerator mappings.
+    are parallelized, mirroring practical accelerator mappings.  Factor-1
+    dims are dropped before deduplication so spatially equivalent unrollings
+    (e.g. ``M8|C1`` vs ``M8``) are yielded exactly once, in canonical
+    (factor-1-free) form.
     """
     pows = [2 ** i for i in range(int(math.log2(num_pes)) + 1)]
     seen = set()
@@ -187,9 +322,9 @@ def enumerate_dataflows(wl: ConvWorkload, num_pes: int,
             for factors in itertools.product(pows, repeat=k):
                 if math.prod(factors) != num_pes:
                     continue
-                key = tuple(sorted(zip(dims, factors)))
-                if key in seen or any(f == 1 for f in factors):
-                    if key in seen:
-                        continue
+                spatial = tuple((d, f) for d, f in zip(dims, factors) if f > 1)
+                key = tuple(sorted(spatial))
+                if key in seen:
+                    continue
                 seen.add(key)
-                yield Dataflow(spatial=tuple(zip(dims, factors)))
+                yield Dataflow(spatial=spatial)

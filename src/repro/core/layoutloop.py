@@ -9,16 +9,19 @@ Extends the Timeloop-style analytical model with:
 
 Two evaluation paths produce bit-identical numbers:
 
-* ``evaluate``          — one (dataflow, layout, mode) point; the scalar
-  oracle, kept deliberately simple.
-* ``evaluate_lattice``  — the full (dataflow x layout x mode) candidate
-  lattice in a handful of vectorized numpy passes: conflict statistics come
-  from ``conflicts.assess_iact_conflicts_grid`` (temporal samples shared per
-  dataflow, one relief evaluation shared by every mode that maps to it) and
-  the nest timing / reorder overhead / energy rollup are array expressions
-  over the whole lattice.  ``cosearch_layer`` / ``network_eval`` and the
-  network planner reduce over the resulting ``LatticeMetrics`` table instead
-  of looping scalar ``evaluate`` calls.
+* ``evaluate``          — one (dataflow, tiling, layout, mode) point; the
+  scalar oracle, kept deliberately simple.  The on-chip tiling rides on
+  ``Dataflow.tiles`` and drives the DRAM reuse/capacity terms
+  (``tile_dram_terms``) plus the conflict sample bases.
+* ``evaluate_lattice``  — the full 4-D (dataflow x tile x layout x mode)
+  candidate lattice in a handful of vectorized numpy passes: conflict
+  statistics come from ``conflicts.assess_iact_conflicts_lattice`` (temporal
+  samples shared per tiled dataflow, one relief evaluation shared by every
+  mode that maps to it) and the nest timing / reorder overhead / DRAM tile
+  terms / energy rollup are array expressions over the whole lattice.
+  ``cosearch_layer`` / ``network_eval`` and the network planner reduce over
+  the resulting ``LatticeMetrics`` table instead of looping scalar
+  ``evaluate`` calls.
 """
 from __future__ import annotations
 
@@ -28,8 +31,9 @@ from typing import Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .conflicts import assess_iact_conflicts, assess_iact_conflicts_grid
-from .dataflow import ConvWorkload, Dataflow, enumerate_dataflows
+from .conflicts import assess_iact_conflicts, assess_iact_conflicts_lattice
+from .dataflow import (ConvWorkload, Dataflow, enumerate_dataflows,
+                       tile_extents, tile_traffic_words, tile_working_set)
 from .energy import DEFAULT_ENERGY, EnergyModel
 from .layout import Buffer, Layout, conv_layout_space
 from .nest import NestConfig, nest_cycle_terms, nest_cycles
@@ -53,6 +57,7 @@ class Metrics:
     dram_bytes: float
     line_reads: float
     pj_per_mac: float = float("nan")
+    dram_stall_cycles: float = 0.0   # exposed off-chip refetch/spill latency
 
     @property
     def edp(self) -> float:
@@ -126,9 +131,44 @@ def reorder_overhead(wl: ConvWorkload, cfg: EvalConfig, mode: str,
     raise ValueError(f"unknown reorder mode {mode!r}")
 
 
+def tile_dram_terms(wl: ConvWorkload, df: Dataflow, cfg: EvalConfig
+                    ) -> Tuple[float, float]:
+    """(off-chip traffic bytes, exposed stall cycles) for ``df``'s tiling.
+
+    The layer's effective tile (``dataflow.tile_extents``: declared tiles
+    clamped into [spatial factor, dim]) determines two things the untiled
+    model ignored:
+
+    * **reuse** — each tensor is re-fetched per outer-tile iteration over
+      the dims it does not index (``tile_traffic_words``), and
+    * **capacity** — a tile whose working set overflows the on-chip buffer
+      thrashes: all traffic is scaled by the overflow factor (the default
+      whole-tensor tiling of a large layer pays this, which is exactly what
+      a capacity-feasible tiling buys its refetch multipliers back against).
+
+    Only traffic *beyond* the mandatory one-pass streaming (which the
+    compute pipeline hides) is exposed as stall cycles.  Both the scalar
+    ``evaluate`` and the 4-D lattice call this helper, so the two paths stay
+    bit-identical by construction.
+    """
+    ext = tile_extents(wl, df)
+    traffic_words = tile_traffic_words(wl, ext)
+    spill = max(1.0, tile_working_set(wl, ext)
+                / (cfg.buffer.num_lines * cfg.buffer.line_size))
+    traffic_bytes = traffic_words * cfg.dtype_bytes * spill
+    iact_words = math.prod(wl.iact_dims().values())
+    w_words = math.prod(wl.weight_dims().values())
+    oact_words = math.prod(wl.oact_dims().values())
+    tensor_bytes = (iact_words + w_words + oact_words) * cfg.dtype_bytes
+    stall = max(0.0, (traffic_bytes - tensor_bytes)
+                / cfg.dram_bytes_per_cycle)
+    return traffic_bytes, stall
+
+
 def evaluate(wl: ConvWorkload, df: Dataflow, layout: Layout,
              cfg: EvalConfig, reorder: Optional[str] = None) -> Metrics:
-    """Latency + energy of one layer under one (dataflow, layout) pair.
+    """Latency + energy of one layer under one (dataflow, tiling, layout)
+    point — the tiling rides on ``df.tiles``.
 
     ``reorder`` overrides ``cfg.reorder`` for this call (the planner sweeps
     per-boundary reorder modes without rebuilding configs).
@@ -143,10 +183,8 @@ def evaluate(wl: ConvWorkload, df: Dataflow, layout: Layout,
     compute_cycles = timing.total_cycles
     util = timing.steady_utilization / rep.slowdown
 
-    iact_words = math.prod(wl.iact_dims().values())
-    w_words = math.prod(wl.weight_dims().values())
     oact_words = math.prod(wl.oact_dims().values())
-    tensor_bytes = (iact_words + w_words + oact_words) * cfg.dtype_bytes
+    traffic_bytes, dram_stall = tile_dram_terms(wl, df, cfg)
 
     active_cycles = max(1.0, timing.total_cycles - timing.weight_load_cycles)
     line_reads = rep.avg_lines_per_cycle * active_cycles          # iActs
@@ -158,36 +196,41 @@ def evaluate(wl: ConvWorkload, df: Dataflow, layout: Layout,
     reorder_cycles = ro.cycles
     line_reads += ro.line_reads
     line_writes += ro.line_writes
-    dram_bytes = float(tensor_bytes) + ro.dram_bytes
+    dram_bytes = traffic_bytes + ro.dram_bytes
 
     energy = (
         wl.macs() * (e.mac_pj + 2 * e.reg_access_pj)
         + line_reads * e.sram_line_read_pj
         + line_writes * e.sram_line_write_pj
-        + e.dram_bytes_pj(tensor_bytes)
+        + e.dram_bytes_pj(traffic_bytes)
         + ro.energy_pj
     )
-    cycles = compute_cycles + reorder_cycles
+    cycles = compute_cycles + reorder_cycles + dram_stall
     return Metrics(cycles=cycles, compute_cycles=compute_cycles,
                    reorder_cycles=reorder_cycles, slowdown=rep.slowdown,
                    utilization=util, energy_pj=energy, dram_bytes=dram_bytes,
                    line_reads=line_reads,
-                   pj_per_mac=energy / max(wl.macs(), 1))
+                   pj_per_mac=energy / max(wl.macs(), 1),
+                   dram_stall_cycles=dram_stall)
 
 
 # ------------------------------------------------------------ batched lattice
 @dataclasses.dataclass(frozen=True)
 class LatticeMetrics:
-    """Dense per-layer cost table over a (dataflow x layout x mode) lattice.
+    """Dense per-layer cost table over a 4-D
+    ``(dataflow x tile x layout x mode)`` lattice.
 
-    Every array is indexed ``[dataflow, layout, mode]``; ``metrics`` slices
-    one lattice point back to a ``Metrics`` bit-identical to the scalar
-    ``evaluate`` call it replaces (asserted field-by-field in
+    Every array is indexed ``[dataflow, tile, layout, mode]``; ``metrics``
+    slices one lattice point back to a ``Metrics`` bit-identical to the
+    scalar ``evaluate`` call it replaces — the scalar equivalent of point
+    ``(d, t, l, m)`` is ``evaluate(wl, dataflows[d].with_tiles(tilings[t]),
+    layouts[l], cfg, reorder=modes[m])`` (asserted field-by-field in
     ``tests/test_lattice.py``).
     """
 
     workload: ConvWorkload
     dataflows: Tuple[Dataflow, ...]
+    tilings: Tuple[Tuple[Tuple[str, int], ...], ...]
     layouts: Tuple[Layout, ...]
     modes: Tuple[str, ...]
     cycles: "np.ndarray"
@@ -199,10 +242,12 @@ class LatticeMetrics:
     dram_bytes: "np.ndarray"
     line_reads: "np.ndarray"
     pj_per_mac: "np.ndarray"
+    dram_stall_cycles: "np.ndarray"
 
     @property
-    def shape(self) -> Tuple[int, int, int]:
-        return (len(self.dataflows), len(self.layouts), len(self.modes))
+    def shape(self) -> Tuple[int, int, int, int]:
+        return (len(self.dataflows), len(self.tilings), len(self.layouts),
+                len(self.modes))
 
     def key(self, objective: str) -> "np.ndarray":
         """Per-point cost under an additive objective (the planner's axes)."""
@@ -214,8 +259,13 @@ class LatticeMetrics:
             return self.energy_pj * self.cycles
         raise ValueError(f"objective {objective!r} is not additive")
 
-    def metrics(self, d: int, l: int, m: int) -> Metrics:
-        idx = (d, l, m)
+    def point_dataflow(self, d: int, t: int) -> Dataflow:
+        """The concrete (tiled) dataflow of lattice column ``(d, t)``."""
+        df = self.dataflows[d]
+        return df.with_tiles(self.tilings[t]) if self.tilings[t] else df
+
+    def metrics(self, d: int, t: int, l: int, m: int) -> Metrics:
+        idx = (d, t, l, m)
         return Metrics(
             cycles=float(self.cycles[idx]),
             compute_cycles=float(self.compute_cycles[idx]),
@@ -225,56 +275,74 @@ class LatticeMetrics:
             energy_pj=float(self.energy_pj[idx]),
             dram_bytes=float(self.dram_bytes[idx]),
             line_reads=float(self.line_reads[idx]),
-            pj_per_mac=float(self.pj_per_mac[idx]))
+            pj_per_mac=float(self.pj_per_mac[idx]),
+            dram_stall_cycles=float(self.dram_stall_cycles[idx]))
+
+
+DEFAULT_TILINGS: Tuple[Tuple[Tuple[str, int], ...], ...] = ((),)
 
 
 def evaluate_lattice(wl: ConvWorkload, dataflows: Sequence[Dataflow],
                      layouts: Sequence[Layout], modes: Sequence[str],
-                     cfg: EvalConfig) -> LatticeMetrics:
-    """Evaluate the full candidate lattice in vectorized numpy passes.
+                     cfg: EvalConfig,
+                     tilings: Sequence[Tuple[Tuple[str, int], ...]]
+                     = DEFAULT_TILINGS) -> LatticeMetrics:
+    """Evaluate the full 4-D candidate lattice in vectorized numpy passes.
 
-    Replaces ``len(dataflows) * len(layouts) * len(modes)`` scalar
-    ``evaluate`` calls: temporal samples are derived once per dataflow,
-    conflict statistics once per (dataflow, layout, *relief*) — every mode
-    mapping to the same read-side relief shares them — and the nest timing,
-    reorder overhead and energy rollup are single array expressions over the
-    whole lattice, written to mirror the scalar path's float operations
-    exactly.
+    Replaces ``len(dataflows) * len(tilings) * len(layouts) * len(modes)``
+    scalar ``evaluate`` calls: temporal samples are derived once per
+    (dataflow, tiling) — ``Dataflow.sample_table`` memoizes on the tiled
+    dataflow — conflict statistics once per (dataflow, tiling, layout,
+    *relief*) with every mode mapping to the same read-side relief sharing
+    them, the per-(dataflow, tiling) DRAM traffic/stall terms come from the
+    same ``tile_dram_terms`` helper the scalar path calls, and the nest
+    timing, reorder overhead and energy rollup are single array expressions
+    over the whole lattice, written to mirror the scalar path's float
+    operations exactly.  ``tilings`` defaults to the single whole-tensor
+    tiling, which reproduces the pre-tile-axis 3-D lattice.
     """
     dataflows = tuple(dataflows)
+    tilings = tuple(tuple(t) for t in tilings)
     layouts = tuple(layouts)
     modes = tuple(modes)
     for mode in modes:
         if mode not in READ_RELIEF:
             raise ValueError(f"unknown reorder mode {mode!r}")
     e = cfg.energy
-    nd, nl, nm = len(dataflows), len(layouts), len(modes)
+    nd, nt, nl, nm = len(dataflows), len(tilings), len(layouts), len(modes)
     reliefs = tuple(dict.fromkeys(READ_RELIEF[m] for m in modes))
 
-    slowdown = np.ones((nd, nl, nm))
-    avg_lines = np.zeros((nd, nl, nm))
+    stats = assess_iact_conflicts_lattice(wl, dataflows, tilings, layouts,
+                                          cfg.buffer, reliefs)
+    slowdown = np.ones((nd, nt, nl, nm))
+    avg_lines = np.zeros((nd, nt, nl, nm))
+    for mi, mode in enumerate(modes):
+        sd, al = stats[READ_RELIEF[mode]]
+        slowdown[:, :, :, mi] = sd
+        avg_lines[:, :, :, mi] = al
+    traffic_b = np.zeros((nd, nt))          # off-chip bytes incl. spill
+    dram_stall = np.zeros((nd, nt))         # exposed refetch latency
+    dram_pj = np.zeros((nd, nt))            # e.dram_bytes_pj(traffic_b)
     for di, df in enumerate(dataflows):
-        grid = assess_iact_conflicts_grid(wl, df, layouts, cfg.buffer, reliefs)
-        for mi, mode in enumerate(modes):
-            reps = grid[READ_RELIEF[mode]]
-            for li in range(nl):
-                slowdown[di, li, mi] = reps[li].slowdown
-                avg_lines[di, li, mi] = reps[li].avg_lines_per_cycle
+        for ti, tiling in enumerate(tilings):
+            df_t = df.with_tiles(tiling) if tiling else df
+            tb, stall = tile_dram_terms(wl, df_t, cfg)
+            traffic_b[di, ti] = tb
+            dram_stall[di, ti] = stall
+            dram_pj[di, ti] = e.dram_bytes_pj(tb)
 
-    # nest timing (``nest_cycles`` in array form over the slowdown axis)
+    # nest timing (``nest_cycles`` in array form over the slowdown axis);
+    # the tile axis does not move the steady/utilization terms
     macs = wl.macs()
     terms = [nest_cycle_terms(cfg.nest, wl, df) for df in dataflows]
     steady = np.array([t[0] for t in terms])                   # (D,)
     util_theo = np.array([t[3] for t in terms])
     fill = cfg.nest.ah
     load = cfg.nest.ah ** 2
-    compute = (steady[:, None, None] + fill) * slowdown + load
-    util = util_theo[:, None, None] / slowdown
+    compute = (steady[:, None, None, None] + fill) * slowdown + load
+    util = util_theo[:, None, None, None] / slowdown
 
-    iact_words = math.prod(wl.iact_dims().values())
-    w_words = math.prod(wl.weight_dims().values())
     oact_words = math.prod(wl.oact_dims().values())
-    tensor_bytes = (iact_words + w_words + oact_words) * cfg.dtype_bytes
     oact_lines = max(1.0, oact_words / cfg.buffer.line_size)
 
     active = np.maximum(1.0, compute - load)
@@ -283,7 +351,7 @@ def evaluate_lattice(wl: ConvWorkload, dataflows: Sequence[Dataflow],
 
     # ``reorder_overhead`` per mode: only the off-chip overlap term varies
     # across the lattice, everything else is the standalone-pass constant
-    ro_cycles = np.zeros((nd, nl, nm))
+    ro_cycles = np.zeros((nd, nt, nl, nm))
     ro_energy = np.zeros(nm)
     ro_dram = np.zeros(nm)
     ro_reads = np.zeros(nm)
@@ -297,31 +365,34 @@ def evaluate_lattice(wl: ConvWorkload, dataflows: Sequence[Dataflow],
         if mode == "offchip":
             # ro.cycles at compute_cycles=0.0 IS the full round-trip latency;
             # expose only the part the lattice point's compute can't hide
-            ro_cycles[:, :, mi] = np.maximum(
-                0.0, ro.cycles - 0.9 * compute[:, :, mi])
+            ro_cycles[:, :, :, mi] = np.maximum(
+                0.0, ro.cycles - 0.9 * compute[:, :, :, mi])
         else:
-            ro_cycles[:, :, mi] = ro.cycles
+            ro_cycles[:, :, :, mi] = ro.cycles
 
-    line_reads = line_reads + ro_reads[None, None, :]
-    line_writes = np.broadcast_to((oact_lines + ro_writes)[None, None, :],
-                                  (nd, nl, nm))
-    dram_bytes = np.broadcast_to((float(tensor_bytes) + ro_dram)[None, None, :],
-                                 (nd, nl, nm))
+    line_reads = line_reads + ro_reads[None, None, None, :]
+    line_writes = np.broadcast_to(
+        (oact_lines + ro_writes)[None, None, None, :], (nd, nt, nl, nm))
+    dram_bytes = np.broadcast_to(
+        traffic_b[:, :, None, None] + ro_dram[None, None, None, :],
+        (nd, nt, nl, nm))
 
     energy = (
         macs * (e.mac_pj + 2 * e.reg_access_pj)
         + line_reads * e.sram_line_read_pj
         + line_writes * e.sram_line_write_pj
-        + e.dram_bytes_pj(tensor_bytes)
-        + ro_energy[None, None, :]
+        + dram_pj[:, :, None, None]
+        + ro_energy[None, None, None, :]
     )
-    cycles = compute + ro_cycles
+    cycles = compute + ro_cycles + dram_stall[:, :, None, None]
     return LatticeMetrics(
-        workload=wl, dataflows=dataflows, layouts=layouts, modes=modes,
-        cycles=cycles, compute_cycles=compute, reorder_cycles=ro_cycles,
-        slowdown=slowdown, utilization=util, energy_pj=energy,
-        dram_bytes=dram_bytes, line_reads=line_reads,
-        pj_per_mac=energy / max(macs, 1))
+        workload=wl, dataflows=dataflows, tilings=tilings, layouts=layouts,
+        modes=modes, cycles=cycles, compute_cycles=compute,
+        reorder_cycles=ro_cycles, slowdown=slowdown, utilization=util,
+        energy_pj=energy, dram_bytes=dram_bytes, line_reads=line_reads,
+        pj_per_mac=energy / max(macs, 1),
+        dram_stall_cycles=np.broadcast_to(
+            dram_stall[:, :, None, None], (nd, nt, nl, nm)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -336,21 +407,30 @@ def cosearch_layer(wl: ConvWorkload, cfg: EvalConfig,
                    layouts: Optional[Sequence[Layout]] = None,
                    dataflows: Optional[Iterable[Dataflow]] = None,
                    layout_fixed: Optional[Layout] = None,
-                   objective: str = "edp") -> SearchResult:
-    """Exhaustive layout x pruned dataflow co-search for one layer (paper §VI-A2).
+                   objective: str = "edp",
+                   tilings: Sequence[Tuple[Tuple[str, int], ...]]
+                   = DEFAULT_TILINGS) -> SearchResult:
+    """Exhaustive layout x pruned dataflow (x tiling) co-search for one layer
+    (paper §VI-A2).
 
     One ``evaluate_lattice`` pass + an argmin; the flatten order (layouts
-    outer, dataflows inner) preserves the scalar loop's first-wins tie-break.
+    outer, dataflows next, tilings innermost) preserves the scalar loop's
+    first-wins tie-break.
     """
     layouts = [layout_fixed] if layout_fixed is not None else \
         list(layouts or conv_layout_space())
     pes = cfg.nest.aw * cfg.nest.ah
     dfs = list(dataflows) if dataflows is not None else \
         list(enumerate_dataflows(wl, pes))
-    lat = evaluate_lattice(wl, dfs, layouts, (cfg.reorder,), cfg)
-    key = lat.key("edp" if objective == "edp" else "cycles")[:, :, 0]
-    li, di = divmod(int(np.argmin(key.T.reshape(-1))), len(dfs))
-    return SearchResult(wl, dfs[di], layouts[li], lat.metrics(di, li, 0))
+    tilings = tuple(tilings)
+    lat = evaluate_lattice(wl, dfs, layouts, (cfg.reorder,), cfg,
+                           tilings=tilings)
+    key = lat.key("edp" if objective == "edp" else "cycles")[:, :, :, 0]
+    flat = int(np.argmin(np.moveaxis(key, 2, 0).reshape(-1)))
+    li, rest = divmod(flat, len(dfs) * len(tilings))
+    di, ti = divmod(rest, len(tilings))
+    return SearchResult(wl, lat.point_dataflow(di, ti), layouts[li],
+                        lat.metrics(di, ti, li, 0))
 
 
 def network_eval(layers: Sequence[ConvWorkload], cfg: EvalConfig,
@@ -377,9 +457,11 @@ def network_eval(layers: Sequence[ConvWorkload], cfg: EvalConfig,
     for li, lay in enumerate(layouts):
         res = []
         for wl, (dfs, lat) in zip(layers, per_layer):
-            keys = lat.key("edp" if objective == "edp" else "cycles")[:, li, 0]
+            keys = lat.key("edp" if objective == "edp"
+                           else "cycles")[:, 0, li, 0]
             di = int(np.argmin(keys))
-            res.append(SearchResult(wl, dfs[di], lay, lat.metrics(di, li, 0)))
+            res.append(SearchResult(wl, dfs[di], lay,
+                                    lat.metrics(di, 0, li, 0)))
         total = sum(r.metrics.edp for r in res)
         if best_total is None or total < best_total:
             best_total, best_results = total, res

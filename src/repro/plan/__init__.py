@@ -16,8 +16,9 @@ from .search import (NetworkPlanner, PlannerOptions, brute_force_plan,
 from .executor import (PlanError, PreparedNetwork, PreparedPlan,
                        adapt_activation, execute_network,
                        execute_network_reference, execute_plan,
-                       execute_plan_reference, permute_weight_blocks,
-                       prepare_network, prepare_plan)
+                       execute_plan_reference, fold_batchnorm,
+                       permute_weight_blocks, prepare_network, prepare_plan,
+                       step_kernel_blocks)
 
 __all__ = [
     "LayerGraph", "from_layers", "resnet50_graph", "mobilenet_v3_graph",
@@ -29,5 +30,6 @@ __all__ = [
     "PlanError", "PreparedPlan", "prepare_plan", "execute_plan",
     "execute_plan_reference", "permute_weight_blocks",
     "PreparedNetwork", "prepare_network", "execute_network",
-    "execute_network_reference", "adapt_activation",
+    "execute_network_reference", "adapt_activation", "fold_batchnorm",
+    "step_kernel_blocks",
 ]

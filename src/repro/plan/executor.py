@@ -57,11 +57,71 @@ from repro.core.workloads import input_channels, is_depthwise, weight_shape
 from repro.kernels import ops, ref
 
 from .graph import LayerGraph
-from .plan import RIR_BLOCK, ExecutionPlan, layout_block_perm
+from .plan import RIR_BLOCK, ExecutionPlan, PlanStep, layout_block_perm
+
+# the smallest kernel block the tile-derived grid may shrink to: below this
+# the grid bookkeeping dwarfs the MXU work (and interpret-mode test time)
+MIN_KERNEL_BLOCK = 64
 
 
 class PlanError(ValueError):
     """A plan is internally inconsistent or doesn't fit the given tensors."""
+
+
+def _pow2_floor(x: int) -> int:
+    return 1 << (max(1, int(x)).bit_length() - 1)
+
+
+def step_kernel_blocks(step: PlanStep, block: int = RIR_BLOCK
+                       ) -> Tuple[int, int]:
+    """(block_m, block_k) the kernel grid should use for this step.
+
+    The plan's on-chip tiling bounds how many GEMM rows (``N*P*Q`` tile) and
+    reduction elements (``C`` tile x taps) one pass keeps resident, so the
+    kernel's block/grid shape follows the artifact instead of a hardcoded
+    constant: the largest power of two under the tile extent, clamped into
+    ``[MIN_KERNEL_BLOCK, block]``.  Tile-less steps (v1 artifacts, untiled
+    plans) keep the full ``block`` — the pre-tiling behaviour.  The output
+    feature axis always stays at ``block``: epilogue permutations are
+    defined over ``RIR_BLOCK``-wide boundary-layout blocks.
+    """
+    if not step.tiles:
+        return block, block
+    wl = step.workload
+    t = dict(step.tiles)
+
+    def ext(d: str, size: int) -> int:
+        return max(1, min(size, t.get(d, size)))
+
+    rows = ext("N", wl.N) * ext("P", wl.P) * ext("Q", wl.Q)
+    kdim = ext("C", wl.C) * wl.R * wl.S
+    bm = max(MIN_KERNEL_BLOCK, min(block, _pow2_floor(rows)))
+    bk = max(MIN_KERNEL_BLOCK, min(block, _pow2_floor(kdim)))
+    return bm, bk
+
+
+def fold_batchnorm(w: jax.Array, gamma, beta, mean, var,
+                   eps: float = 1e-5, conv_bias=None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Fold inference batch-norm (+ optional conv bias) into the weights.
+
+    ``BN(conv(x, w) + conv_bias)`` == ``conv(x, w * s) + b`` with
+    ``s = gamma / sqrt(var + eps)`` (per output channel) and
+    ``b = beta + (conv_bias - mean) * s``.  The scaled weight feeds the
+    executor's effective-weight pipeline unchanged (the ``w_eff`` hook
+    point); the returned bias vector goes in via ``biases=`` on
+    ``prepare_network`` / ``execute_network``.  Works for both dense
+    ``(R, S, C, M)`` and depthwise ``(R, S, M)`` weights — the output
+    channel is the last axis of each.
+    """
+    w = jnp.asarray(w, jnp.float32)
+    gamma, beta, mean, var = (jnp.asarray(a, jnp.float32)
+                              for a in (gamma, beta, mean, var))
+    scale = gamma / jnp.sqrt(var + eps)
+    bias = beta - mean * scale
+    if conv_bias is not None:
+        bias = bias + jnp.asarray(conv_bias, jnp.float32) * scale
+    return w * scale, bias
 
 
 @functools.lru_cache(maxsize=4096)
@@ -171,6 +231,8 @@ class PreparedPlan:
         self.x_dim = x_dim
         self.weights = tuple(weights)
         self.perms = _boundary_perms(plan, x_dim, weights, block)
+        # per-step kernel blocking, derived from the plan's tiling
+        self.blocks = [step_kernel_blocks(s, block) for s in plan.steps]
         self.w_eff = [
             permute_weight_blocks(w, self.perms[i], block)
             if len(self.perms[i]) > 1 else w
@@ -183,13 +245,14 @@ class PreparedPlan:
         cur = apply_block_perm(x, perms[0], block) if len(perms[0]) > 1 else x
         for i, (step, w_eff) in enumerate(zip(plan.steps, self.w_eff)):
             out_perm = perms[i + 1]
-            tiled = (cur.shape[0] % block == 0 and w_eff.shape[0] % block == 0
+            bm, bk = self.blocks[i]
+            tiled = (cur.shape[0] % bm == 0 and w_eff.shape[0] % bk == 0
                      and w_eff.shape[1] % block == 0)
             if use_pallas and tiled and step.kernel == "rir_matmul":
                 cur = ops.rir_matmul(cur, w_eff, out_perm
                                      if len(out_perm) > 1 else None,
-                                     block_m=block, block_n=block,
-                                     block_k=block)
+                                     block_m=bm, block_n=block,
+                                     block_k=bk)
             else:
                 y = jnp.dot(cur, w_eff, preferred_element_type=jnp.float32)
                 y = y.astype(cur.dtype)
@@ -408,6 +471,9 @@ class _NetStep:
     out_perm: Tuple[int, ...]
     joins: Tuple[_JoinExec, ...]
     out_shape: Tuple[int, int, int, int]       # (N, P, Q, M)
+    block_m: int = RIR_BLOCK       # kernel grid blocks from the plan's tile
+    block_k: int = RIR_BLOCK
+    bias: Optional[jax.Array] = None   # (M,), stored in out_perm block order
 
 
 class PreparedNetwork:
@@ -420,12 +486,16 @@ class PreparedNetwork:
     """
 
     def __init__(self, plan: ExecutionPlan, graph: LayerGraph,
-                 weights: Sequence[jax.Array], *, block: int = RIR_BLOCK):
+                 weights: Sequence[jax.Array], *, block: int = RIR_BLOCK,
+                 biases: Optional[Sequence[Optional[jax.Array]]] = None):
         if len(plan.steps) != len(graph.layers):
             raise PlanError(f"plan has {len(plan.steps)} steps for "
                             f"{len(graph.layers)}-layer graph")
         if len(weights) != len(graph.layers):
             raise PlanError(f"{len(weights)} weights for "
+                            f"{len(graph.layers)} layers")
+        if biases is not None and len(biases) != len(graph.layers):
+            raise PlanError(f"{len(biases)} biases for "
                             f"{len(graph.layers)} layers")
         for step, wl in zip(plan.steps, graph.layers):
             if step.workload.dims() != wl.dims() or \
@@ -436,6 +506,7 @@ class PreparedNetwork:
         self.graph = graph
         self.block = block
         self.weights = tuple(weights)
+        self.biases = None if biases is None else tuple(biases)
         self.input_shape = graph.input_shape()
 
         # boundary feature widths + block perms: boundary 0 is the network
@@ -462,11 +533,22 @@ class PreparedNetwork:
             row_map = None if passthrough else jnp.asarray(_patch_row_map(
                 wl.N, h_in, w_in, wl.H, wl.W, wl.P, wl.Q, wl.R, wl.S,
                 wl.stride))
+            bm, bk = step_kernel_blocks(step, block)
             w_eff = _effective_conv_weight(wl, w, in_width, self.perms[i],
                                            block)
-            w_eff = _pad_axis(_pad_axis(w_eff, block, 0), block, 1)
+            w_eff = _pad_axis(_pad_axis(w_eff, bk, 0), block, 1)
             out_perm = self.perms[i + 1]
             rows_out = wl.N * wl.P * wl.Q
+            bias = None
+            if biases is not None and biases[i] is not None:
+                bias = jnp.asarray(biases[i], jnp.float32)
+                if bias.shape != (wl.M,):
+                    raise PlanError(f"layer {wl.name}: bias shape "
+                                    f"{bias.shape} != ({wl.M},)")
+                if len(out_perm) > 1:
+                    # the bias joins the output in its stored (boundary-
+                    # layout) block order, like the fused residual
+                    bias = apply_block_perm(bias, out_perm, block)
             joins = []
             for j in step.joins:
                 src = j.src
@@ -482,7 +564,8 @@ class PreparedNetwork:
                 wl=wl, row_map=row_map, w_eff=w_eff,
                 k_width=wl.R * wl.S * in_width, rows_out=rows_out,
                 out_perm=out_perm, joins=tuple(joins),
-                out_shape=(wl.N, wl.P, wl.Q, wl.M)))
+                out_shape=(wl.N, wl.P, wl.Q, wl.M),
+                block_m=bm, block_k=bk, bias=bias))
         self._buffer_set = set(graph.buffer_sources())
 
     # ------------------------------------------------------------- execution
@@ -526,7 +609,8 @@ class PreparedNetwork:
                     [cur, jnp.zeros((1, cur.shape[1]), cur.dtype)])
                 patches = padded[st.row_map].reshape(
                     st.rows_out, st.k_width)
-            patches = _pad_axis(_pad_axis(patches, block, 0), block, 1)
+            patches = _pad_axis(_pad_axis(patches, st.block_m, 0),
+                                st.block_k, 1)
             fused_res = None
             for je in st.joins:
                 if not je.fused:
@@ -537,20 +621,22 @@ class PreparedNetwork:
             if use_pallas:
                 res_pad = None
                 if fused_res is not None:
-                    res_pad = _pad_axis(_pad_axis(fused_res, block, 0),
+                    res_pad = _pad_axis(_pad_axis(fused_res, st.block_m, 0),
                                         block, 1)
                 y = ops.rir_matmul(patches, st.w_eff, out_perm,
-                                   residual=res_pad, block_m=block,
-                                   block_n=block, block_k=block)
+                                   residual=res_pad, block_m=st.block_m,
+                                   block_n=block, block_k=st.block_k)
             else:
                 y = jnp.dot(patches, st.w_eff,
                             preferred_element_type=jnp.float32)
                 if out_perm is not None:
                     y = apply_block_perm(y, out_perm, block)
                 if fused_res is not None:
-                    y = y + _pad_axis(_pad_axis(fused_res, block, 0),
+                    y = y + _pad_axis(_pad_axis(fused_res, st.block_m, 0),
                                       block, 1)
             y = y[:st.rows_out, :st.wl.M]
+            if st.bias is not None:
+                y = y + st.bias[None, :]
             for je in st.joins:
                 if je.fused:
                     continue
@@ -568,16 +654,30 @@ class PreparedNetwork:
 
 def prepare_network(plan: ExecutionPlan, graph: LayerGraph,
                     weights: Sequence[jax.Array], *,
-                    block: int = RIR_BLOCK) -> PreparedNetwork:
+                    block: int = RIR_BLOCK,
+                    biases: Optional[Sequence[Optional[jax.Array]]] = None
+                    ) -> PreparedNetwork:
     """Hoist gathers/weights/join strategy out of the per-batch path."""
-    return PreparedNetwork(plan, graph, weights, block=block)
+    return PreparedNetwork(plan, graph, weights, block=block, biases=biases)
+
+
+def _biases_stale(prepared_biases, biases) -> bool:
+    want = None if biases is None else tuple(biases)
+    if (prepared_biases is None) != (want is None):
+        return True
+    if want is None:
+        return False
+    return len(prepared_biases) != len(want) or any(
+        a is not b for a, b in zip(prepared_biases, want))
 
 
 def execute_network(plan: ExecutionPlan, graph: LayerGraph, x: jax.Array,
                     weights: Sequence[jax.Array], *, block: int = RIR_BLOCK,
                     activation: Optional[Callable] = None,
                     use_pallas: bool = True,
-                    prepared: Optional[PreparedNetwork] = None) -> jax.Array:
+                    prepared: Optional[PreparedNetwork] = None,
+                    biases: Optional[Sequence[Optional[jax.Array]]] = None
+                    ) -> jax.Array:
     """Execute a complete planned ``LayerGraph`` — convs, depthwise layers
     and residual joins included; no layer falls back to the reference path.
 
@@ -586,25 +686,31 @@ def execute_network(plan: ExecutionPlan, graph: LayerGraph, x: jax.Array,
     in canonical NHWC order.  Intermediate activations only ever exist in
     their planned boundary layouts; each conv's patch gather reads the
     producer's stored order directly and each epilogue writes the consumer's.
+    ``biases`` (per-layer, e.g. from ``fold_batchnorm``) are added to each
+    layer's output before joins and activation.
     """
     if prepared is None:
-        prepared = PreparedNetwork(plan, graph, weights, block=block)
+        prepared = PreparedNetwork(plan, graph, weights, block=block,
+                                   biases=biases)
     elif _prepared_is_stale(prepared, plan, block, weights) \
-            or prepared.graph != graph:
+            or prepared.graph != graph \
+            or _biases_stale(prepared.biases, biases):
         raise PlanError("prepared= was built from a different "
-                        "(plan, graph, weights, block) than this call")
+                        "(plan, graph, weights, biases, block) than this "
+                        "call")
     return prepared(x, activation=activation, use_pallas=use_pallas)
 
 
 def execute_network_reference(graph: LayerGraph, x: jax.Array,
                               weights: Sequence[jax.Array], *,
-                              activation: Optional[Callable] = None
-                              ) -> jax.Array:
+                              activation: Optional[Callable] = None,
+                              biases: Optional[Sequence[Optional[jax.Array]]]
+                              = None) -> jax.Array:
     """Canonical-layout oracle for ``execute_network``.
 
     Pure ``kernels/ref.py`` conv/depthwise semantics plus the same boundary
-    adapter and residual joins; no layouts, no plans — every valid plan for
-    ``graph`` must reproduce this function's output.
+    adapter, per-layer biases and residual joins; no layouts, no plans —
+    every valid plan for ``graph`` must reproduce this function's output.
     """
     outs: List[jax.Array] = []
     cur = jnp.asarray(x, jnp.float32)
@@ -618,6 +724,8 @@ def execute_network_reference(graph: LayerGraph, x: jax.Array,
             if w.ndim == 2:
                 w = w.reshape(wl.R, wl.S, wl.C, wl.M)
             y = ref.conv2d(a, w, wl.stride)
+        if biases is not None and biases[i] is not None:
+            y = y + jnp.asarray(biases[i], jnp.float32)[None, None, None, :]
         for src in graph.skips_into(i):
             y = y + adapt_activation(outs[src], wl.P, wl.Q, wl.M)
         if activation is not None and i < last:

@@ -18,7 +18,11 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.dataflow import ConvWorkload, Dataflow
 from repro.core.layoutloop import EvalConfig
 
-PLAN_VERSION = 1
+# v2 adds the planned on-chip tiling (``PlanStep.tiles`` + the dataflow's
+# ``tiles`` coordinate); tile-less v1 artifacts load with the default
+# whole-tensor tiling, which executes exactly as before.
+PLAN_VERSION = 2
+COMPAT_VERSIONS = (1, 2)
 RIR_BLOCK = 128   # kernel feature-block granularity (MXU lane width)
 
 
@@ -42,7 +46,7 @@ def dataflow_to_dict(df: Dataflow) -> Dict:
 def dataflow_from_dict(d: Dict) -> Dataflow:
     return Dataflow(spatial=tuple((x, int(f)) for x, f in d["spatial"]),
                     order=tuple(d["order"]),
-                    tiles=tuple((x, int(f)) for x, f in d["tiles"]),
+                    tiles=tuple((x, int(f)) for x, f in d.get("tiles", ())),
                     name=d["name"])
 
 
@@ -116,6 +120,7 @@ class PlanStep:
     energy_pj: float
     lowering: str = "gemm"         # gemm | im2col | depthwise (K-side transform)
     joins: Tuple[JoinSpec, ...] = ()   # skip edges adding at the out boundary
+    tiles: Tuple[Tuple[str, int], ...] = ()   # planned on-chip tiling (v2)
 
     def to_dict(self) -> Dict:
         return {"layer": self.layer,
@@ -127,10 +132,14 @@ class PlanStep:
                                   if self.epilogue_perm is not None else None),
                 "cycles": self.cycles, "energy_pj": self.energy_pj,
                 "lowering": self.lowering,
-                "joins": [j.to_dict() for j in self.joins]}
+                "joins": [j.to_dict() for j in self.joins],
+                "tiles": [list(p) for p in self.tiles]}
 
     @staticmethod
     def from_dict(d: Dict) -> "PlanStep":
+        # v1 steps carry no "tiles" key: fall back to the dataflow's tiling
+        # (empty in v1 artifacts == the default whole-tensor tiling)
+        tiles = d.get("tiles", d["dataflow"].get("tiles", ()))
         return PlanStep(
             layer=d["layer"], workload=workload_from_dict(d["workload"]),
             dataflow=dataflow_from_dict(d["dataflow"]),
@@ -140,7 +149,8 @@ class PlanStep:
                            if d["epilogue_perm"] is not None else None),
             cycles=float(d["cycles"]), energy_pj=float(d["energy_pj"]),
             lowering=d.get("lowering", "gemm"),
-            joins=tuple(JoinSpec.from_dict(j) for j in d.get("joins", ())))
+            joins=tuple(JoinSpec.from_dict(j) for j in d.get("joins", ())),
+            tiles=tuple((x, int(f)) for x, f in tiles))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,9 +194,9 @@ class ExecutionPlan:
     @staticmethod
     def from_json(text: str) -> "ExecutionPlan":
         d = json.loads(text)
-        if d.get("version") != PLAN_VERSION:
-            raise ValueError(f"plan version {d.get('version')} != "
-                             f"{PLAN_VERSION}")
+        if d.get("version") not in COMPAT_VERSIONS:
+            raise ValueError(f"plan version {d.get('version')} not in "
+                             f"{COMPAT_VERSIONS}")
         return ExecutionPlan(
             graph_name=d["graph_name"], graph_hash=d["graph_hash"],
             config_key=d["config_key"], objective=d["objective"],

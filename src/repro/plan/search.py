@@ -26,7 +26,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.dataflow import Dataflow, enumerate_dataflows
+from repro.core.dataflow import (Dataflow, enumerate_dataflows,
+                                 enumerate_tilings)
 from repro.core.layout import Layout, conv_layout_space
 from repro.core.layoutloop import (EvalConfig, LatticeMetrics, Metrics,
                                    evaluate, evaluate_lattice,
@@ -48,6 +49,10 @@ class PlannerOptions:
     a layout-changing boundary; ``residual_mode`` relayouts a skip tensor
     whose producing boundary disagrees with its consuming boundary (RIR can
     only write ONE layout per tensor, so skips fall back to a copy pass).
+    ``search_tiles`` adds the on-chip tile axis to every layer's lattice
+    (``core.dataflow.enumerate_tilings``, at most ``max_tilings``
+    capacity-feasible candidates over ``tile_dims``); the default tiling is
+    always injected, so the tiled DP never loses to the untiled one.
     """
 
     objective: str = "cycles"
@@ -61,6 +66,9 @@ class PlannerOptions:
     # weight-port bandwidth can't feed pure output-channel parallelism (the
     # paper's D1/D2 mappings always co-parallelize an input dim)
     parallel_dims: Tuple[str, ...] = ("M", "C", "P", "Q")
+    search_tiles: bool = True
+    max_tilings: int = 8
+    tile_dims: Tuple[str, ...] = ("M", "C", "P", "Q")
 
     def key(self) -> str:
         return repr(self)
@@ -86,12 +94,17 @@ def _overhead_key(cycles: float, energy: float, objective: str) -> float:
 
 @dataclasses.dataclass
 class _StepChoice:
-    """Best execution of one layer given (input layout, output layout)."""
+    """Best execution of one layer given (input layout, output layout).
+
+    ``dataflow`` carries the chosen tiling on ``Dataflow.tiles``; ``tiles``
+    repeats it explicitly so plan emission and tests never have to dig.
+    """
 
     dataflow: Dataflow
     metrics: Metrics
     mode: str
     key: float
+    tiles: Tuple[Tuple[str, int], ...] = ()
 
 
 @dataclasses.dataclass
@@ -133,6 +146,18 @@ class NetworkPlanner:
                 wl, pes, max_dims=opts.max_spatial_dims,
                 parallel_dims=opts.parallel_dims))
                 for i, wl in enumerate(graph.layers)}
+        # the tile axis: shared across a layer's dataflows (one dense 4-D
+        # lattice per layer); entry 0 is always the default whole-tensor
+        # tiling, so the untiled plan is a sub-space of the tiled search
+        cap_bytes = cfg.buffer.num_lines * cfg.buffer.line_size \
+            * cfg.dtype_bytes
+        if opts.search_tiles:
+            self._tilings = {i: tuple(enumerate_tilings(
+                wl, None, cap_bytes, cfg.dtype_bytes,
+                tile_dims=opts.tile_dims, max_tilings=opts.max_tilings))
+                for i, wl in enumerate(graph.layers)}
+        else:
+            self._tilings = {i: ((),) for i in range(len(graph))}
         self._layer_memo: Dict[Tuple[int, str, str],
                                Tuple[float, Dataflow, Metrics]] = {}
         self._skip_memo: Dict[int, Tuple[float, float]] = {}
@@ -154,7 +179,8 @@ class NetworkPlanner:
         tab = self._tables.get(i)
         if tab is None:
             tab = evaluate_lattice(self.graph.layers[i], self._dfs[i],
-                                   self.layouts, self._modes, self.cfg)
+                                   self.layouts, self._modes, self.cfg,
+                                   tilings=self._tilings[i])
             self._tables[i] = tab
             self._keys[i] = tab.key(self.opts.objective)
         return tab
@@ -168,28 +194,35 @@ class NetworkPlanner:
     # ---------------------------------------------------------------- layer cost
     def layer_cost(self, i: int, layout: Layout, mode: str
                    ) -> Tuple[float, Dataflow, Metrics]:
-        """Min-cost dataflow for layer i reading ``layout``, reorder ``mode``."""
+        """Min-cost (dataflow, tiling) for layer i reading ``layout``,
+        reorder ``mode`` — the returned dataflow carries the tiling."""
         memo_key = (i, layout.name(), mode)
         hit = self._layer_memo.get(memo_key)
         if hit is not None:
             return hit
         j = self._layout_idx.get(layout.name())
         mi = self._mode_idx.get(mode)
+        nt = len(self._tilings[i])
         if self._use_lattice and j is not None and mi is not None:
             tab = self._table(i)
-            keys = self._keys[i][:, j, mi]
-            di = int(np.argmin(keys))    # first-min == scalar loop tie-break
-            best = (float(keys[di]), self._dfs[i][di], tab.metrics(di, j, mi))
+            keys = self._keys[i][:, :, j, mi]
+            # C-order first-min == the scalar loop's (df outer, tile inner)
+            # first-wins tie-break
+            di, ti = divmod(int(np.argmin(keys)), nt)
+            best = (float(keys[di, ti]), tab.point_dataflow(di, ti),
+                    tab.metrics(di, ti, j, mi))
         else:
             # scalar fallback: lattice disabled, or a layout outside the
             # search space (``fixed`` with an external baseline layout)
             wl = self.graph.layers[i]
             best = None
             for df in self._dfs[i]:
-                m = evaluate(wl, df, layout, self.cfg, reorder=mode)
-                k = _metric_key(m, self.opts.objective)
-                if best is None or k < best[0]:
-                    best = (k, df, m)
+                for tiling in self._tilings[i]:
+                    df_t = df.with_tiles(tiling) if tiling else df
+                    m = evaluate(wl, df_t, layout, self.cfg, reorder=mode)
+                    k = _metric_key(m, self.opts.objective)
+                    if best is None or k < best[0]:
+                        best = (k, df_t, m)
             assert best is not None, f"no dataflow candidates for layer {i}"
         self._layer_memo[memo_key] = best
         return best
@@ -207,7 +240,8 @@ class NetworkPlanner:
         for mode in modes:
             k, df, m = self.layer_cost(i, l_in, mode)
             if best is None or k < best.key:
-                best = _StepChoice(dataflow=df, metrics=m, mode=mode, key=k)
+                best = _StepChoice(dataflow=df, metrics=m, mode=mode, key=k,
+                                   tiles=df.tiles)
         assert best is not None
         return best
 
@@ -362,7 +396,7 @@ class NetworkPlanner:
                 in_layout=l_in, out_layout=l_out, reorder=choice.mode,
                 kernel="rir_matmul", epilogue_perm=perm, lowering=lowering,
                 joins=joins, cycles=choice.metrics.cycles,
-                energy_pj=choice.metrics.energy_pj))
+                energy_pj=choice.metrics.energy_pj, tiles=choice.tiles))
         return ExecutionPlan(
             graph_name=self.graph.name, graph_hash=self.graph.graph_hash(),
             config_key=config_key(self.cfg, self.opts.key()),

@@ -134,6 +134,9 @@ def test_full_resnet50_executes_through_pallas(modes):
     graph = resnet50_graph()
     plan = make_plan(graph, modes=modes)
     assert all(s.kernel == "rir_matmul" for s in plan.steps)
+    # plans are tiled by default now: the executed path must honour the
+    # tile-derived kernel block/grid shapes, not just the modeled numbers
+    assert any(s.tiles for s in plan.steps)
     assert {i for i, s in enumerate(plan.steps) if s.joins} == {3, 6, 9}
     y, y_ref, _ = run_both(graph, plan=plan, activation=RELU)
     np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-3)
@@ -146,6 +149,7 @@ def test_full_mobilenet_v3_executes_through_pallas():
     plan = make_plan(graph)
     assert all(s.kernel == "rir_matmul" for s in plan.steps)
     assert any(s.lowering == "depthwise" for s in plan.steps)
+    assert any(s.tiles for s in plan.steps)
     # pw2 (24ch) joins pw3's 72ch output: shapes disagree, so the planner
     # must charge (and record) the residual relayout even if layouts match
     assert plan.steps[5].joins == (

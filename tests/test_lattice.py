@@ -1,10 +1,11 @@
 """Batched lattice engine — equivalence against the scalar oracle.
 
 ``evaluate_lattice`` / ``assess_iact_conflicts_grid`` must reproduce the
-scalar ``evaluate`` / ``assess_iact_conflicts`` numbers *bit-for-bit*, and
-the table-driven ``NetworkPlanner`` must emit byte-identical plan artifacts
-to the pre-refactor scalar path.  Randomized lattices are hypothesis-backed
-where available, with a seeded fallback otherwise.
+scalar ``evaluate`` / ``assess_iact_conflicts`` numbers *bit-for-bit* across
+the full 4-D ``(dataflow x tile x layout x mode)`` lattice, and the
+table-driven ``NetworkPlanner`` must emit byte-identical plan artifacts to
+the scalar path — with and without the tile axis.  Randomized lattices are
+hypothesis-backed where available, with a seeded fallback otherwise.
 """
 import dataclasses
 import time
@@ -14,7 +15,9 @@ import pytest
 
 from repro.core.conflicts import (assess_iact_conflicts,
                                   assess_iact_conflicts_grid)
-from repro.core.dataflow import ConvWorkload, enumerate_dataflows
+from repro.core.dataflow import (ConvWorkload, enumerate_dataflows,
+                                 enumerate_tilings, tile_extents,
+                                 tile_working_set)
 from repro.core.layout import Layout, conv_layout_space
 from repro.core.layoutloop import (EvalConfig, cosearch_layer, evaluate,
                                    evaluate_lattice, network_eval,
@@ -52,25 +55,44 @@ def random_workload(rng: np.random.Generator) -> ConvWorkload:
                         name="rand-conv")
 
 
+def capacity_bytes(cfg: EvalConfig) -> int:
+    return cfg.buffer.num_lines * cfg.buffer.line_size * cfg.dtype_bytes
+
+
 def assert_lattice_matches_scalar(wl: ConvWorkload, cfg: EvalConfig,
-                                  max_dfs: int = 8) -> None:
+                                  max_dfs: int = 8,
+                                  max_tilings: int = 3) -> None:
+    """Every 4-D lattice point must equal the scalar evaluate field-by-field.
+
+    The scalar equivalent of point ``(d, t, l, m)`` is
+    ``evaluate(wl, dataflows[d].with_tiles(tilings[t]), layouts[l], cfg,
+    reorder=modes[m])``.
+    """
     pes = cfg.nest.aw * cfg.nest.ah
     dfs = list(enumerate_dataflows(wl, pes))
     if len(dfs) > max_dfs:
         keep = np.random.default_rng(wl.macs() % 2**31).choice(
             len(dfs), size=max_dfs, replace=False)
         dfs = [dfs[i] for i in sorted(keep)]
+    tilings = list(enumerate_tilings(wl, None, capacity_bytes(cfg),
+                                     cfg.dtype_bytes,
+                                     max_tilings=max_tilings))
     layouts = conv_layout_space()
-    lat = evaluate_lattice(wl, dfs, layouts, MODES, cfg)
+    lat = evaluate_lattice(wl, dfs, layouts, MODES, cfg, tilings=tilings)
+    assert lat.shape == (len(dfs), len(tilings), len(layouts), len(MODES))
     for di, df in enumerate(dfs):
-        for li, lay in enumerate(layouts):
-            for mi, mode in enumerate(MODES):
-                want = evaluate(wl, df, lay, cfg, reorder=mode)
-                got = lat.metrics(di, li, mi)
-                for f in dataclasses.fields(want):
-                    assert getattr(got, f.name) == getattr(want, f.name), (
-                        wl.name, df.label(), lay.name(), mode, f.name,
-                        getattr(got, f.name), getattr(want, f.name))
+        for ti, tiling in enumerate(tilings):
+            df_t = df.with_tiles(tiling) if tiling else df
+            assert lat.point_dataflow(di, ti) == df_t
+            for li, lay in enumerate(layouts):
+                for mi, mode in enumerate(MODES):
+                    want = evaluate(wl, df_t, lay, cfg, reorder=mode)
+                    got = lat.metrics(di, ti, li, mi)
+                    for f in dataclasses.fields(want):
+                        assert getattr(got, f.name) == getattr(want, f.name), (
+                            wl.name, df.label(), tiling, lay.name(), mode,
+                            f.name, getattr(got, f.name),
+                            getattr(want, f.name))
 
 
 # ------------------------------------------------------- lattice == scalar
@@ -82,11 +104,16 @@ def test_conflict_grid_matches_scalar_seeded():
         wl = random_workload(rng)
         dfs = list(enumerate_dataflows(wl, 64))
         df = dfs[int(rng.integers(len(dfs)))]
-        grid = assess_iact_conflicts_grid(wl, df, layouts, cfg.buffer, RELIEFS)
-        for r in RELIEFS:
-            for li, lay in enumerate(layouts):
-                assert grid[r][li] == assess_iact_conflicts(
-                    wl, df, lay, cfg.buffer, reorder=r)
+        tilings = list(enumerate_tilings(wl, df, capacity_bytes(cfg),
+                                         max_tilings=2))
+        for tiling in tilings:
+            df_t = df.with_tiles(tiling) if tiling else df
+            grid = assess_iact_conflicts_grid(wl, df_t, layouts, cfg.buffer,
+                                              RELIEFS)
+            for r in RELIEFS:
+                for li, lay in enumerate(layouts):
+                    assert grid[r][li] == assess_iact_conflicts(
+                        wl, df_t, lay, cfg.buffer, reorder=r)
 
 
 def test_lattice_matches_scalar_seeded():
@@ -101,7 +128,86 @@ def test_lattice_matches_scalar_paper_layers():
     from repro.core.workloads import mobilenet_v3_layers
     cfg = EvalConfig()
     for wl in mobilenet_v3_layers()[:3]:
-        assert_lattice_matches_scalar(wl, cfg, max_dfs=6)
+        assert_lattice_matches_scalar(wl, cfg, max_dfs=6, max_tilings=2)
+
+
+def test_untiled_lattice_point_is_default_tiling():
+    """The default (empty) tiling axis entry reproduces the pre-tile 3-D
+    lattice: whole-tensor extents, no refetch multipliers."""
+    wl = ConvWorkload(M=64, C=32, P=14, Q=14, R=3, S=3, name="l")
+    cfg = EvalConfig(nest=NestConfig(aw=8, ah=8))
+    dfs = list(enumerate_dataflows(wl, 64))[:4]
+    lat3 = evaluate_lattice(wl, dfs, SMALL_LAYOUTS, ("none", "rir"), cfg)
+    tilings = list(enumerate_tilings(wl, None, capacity_bytes(cfg)))
+    lat4 = evaluate_lattice(wl, dfs, SMALL_LAYOUTS, ("none", "rir"), cfg,
+                            tilings=tilings)
+    assert tilings[0] == ()
+    np.testing.assert_array_equal(lat3.cycles[:, 0], lat4.cycles[:, 0])
+    np.testing.assert_array_equal(lat3.energy_pj[:, 0], lat4.energy_pj[:, 0])
+
+
+# ----------------------------------------------------- enumerate_tilings
+def test_enumerate_tilings_properties_seeded():
+    """Default first; every non-default tiling capacity-feasible, maximal
+    (bumping any dim overflows), and unique."""
+    rng = np.random.default_rng(3)
+    cfg = EvalConfig()
+    cap = capacity_bytes(cfg)
+    for _ in range(12):
+        wl = random_workload(rng)
+        tilings = list(enumerate_tilings(wl, None, cap, cfg.dtype_bytes))
+        assert tilings[0] == ()
+        assert len(set(tilings)) == len(tilings)
+        dims = wl.dims()
+        for tiling in tilings[1:]:
+            ext = dict(dims)
+            ext.update(tiling)
+            assert tile_working_set(wl, ext) <= cap, (wl.name, tiling)
+            for d, v in tiling:
+                assert 1 <= v < dims[d], (wl.name, tiling)
+                bumped = dict(ext)
+                bumped[d] = min(dims[d], 2 * v)
+                assert (bumped[d] == ext[d]
+                        or tile_working_set(wl, bumped) > cap), \
+                    (wl.name, tiling, d)
+
+
+def test_tile_extents_clamps_to_spatial_factors():
+    wl = ConvWorkload(M=64, C=64, P=16, Q=16, name="l")
+    df = next(iter(enumerate_dataflows(wl, 256))).with_tiles(
+        (("M", 8), ("C", 16)))
+    ext = tile_extents(wl, df)
+    sf = df.spatial_factors()
+    for d, f in sf.items():
+        assert ext[d] >= min(wl.dims()[d], f)
+    assert ext["C"] == 16 and ext["Q"] == 16   # untiled dim keeps full extent
+
+
+def test_tiled_search_never_loses_to_untiled():
+    """The default tiling is always a candidate, so min over the tile axis
+    is <= the untiled best — the 'never worse by construction' guarantee."""
+    cfg = EvalConfig()
+    wl = ConvWorkload(M=256, C=128, P=14, Q=14, R=3, S=3, name="l")
+    dfs = list(enumerate_dataflows(wl, 256, parallel_dims=("C", "P", "Q")))
+    tilings = list(enumerate_tilings(wl, None, capacity_bytes(cfg)))
+    lat = evaluate_lattice(wl, dfs, SMALL_LAYOUTS, ("rir",), cfg,
+                           tilings=tilings)
+    for objective in ("cycles", "edp"):
+        k = lat.key(objective)
+        assert k.min() <= k[:, 0].min()
+
+
+# ----------------------------------------------- enumerate_dataflows dedup
+def test_enumerate_dataflows_no_spatial_duplicates():
+    """Regression: factor-1 dims used to slip past the dedup guard, yielding
+    degenerate duplicates like (('M', 8), ('C', 1)) alongside (('M', 8),)."""
+    for wl, pes in ((ConvWorkload(M=64, C=64, P=16, Q=16, name="l"), 8),
+                    (ConvWorkload.from_gemm(128, 64, 128), 256)):
+        dfs = list(enumerate_dataflows(wl, pes))
+        keys = [tuple(sorted(df.spatial)) for df in dfs]
+        assert len(set(keys)) == len(keys), keys
+        for df in dfs:
+            assert all(f > 1 for _, f in df.spatial), df.spatial
 
 
 if HAVE_HYPOTHESIS:
@@ -114,7 +220,23 @@ if HAVE_HYPOTHESIS:
         wl = ConvWorkload(M=m, C=c, P=p, Q=q, R=r, S=r, stride=stride,
                           name="hyp")
         assert_lattice_matches_scalar(
-            wl, EvalConfig(nest=NestConfig(aw=8, ah=8)), max_dfs=4)
+            wl, EvalConfig(nest=NestConfig(aw=8, ah=8)), max_dfs=4,
+            max_tilings=3)
+
+    @pytest.mark.slow
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(4, 512), st.integers(4, 512), st.integers(4, 64),
+           st.integers(4, 64), st.sampled_from([1, 3, 5]))
+    def test_enumerate_tilings_feasibility_hypothesis(m, c, p, q, r):
+        wl = ConvWorkload(M=m, C=c, P=p, Q=q, R=r, S=r, name="hyp")
+        cfg = EvalConfig()
+        cap = capacity_bytes(cfg)
+        tilings = list(enumerate_tilings(wl, None, cap, cfg.dtype_bytes))
+        assert tilings[0] == ()
+        for tiling in tilings[1:]:
+            ext = dict(wl.dims())
+            ext.update(tiling)
+            assert tile_working_set(wl, ext) <= cap
 
 
 # ------------------------------------------------------------ error handling
@@ -148,6 +270,24 @@ def test_cosearch_layer_matches_scalar_loop():
         assert (got.dataflow, got.layout, got.metrics) == best[1:]
 
 
+def test_cosearch_layer_with_tilings_matches_scalar_loop():
+    cfg = EvalConfig(reorder="rir")
+    wl = ConvWorkload(M=96, C=48, P=14, Q=14, R=3, S=3, name="l")
+    tilings = list(enumerate_tilings(wl, None, capacity_bytes(cfg),
+                                     max_tilings=3))
+    got = cosearch_layer(wl, cfg, layouts=SMALL_LAYOUTS, tilings=tilings,
+                         objective="edp")
+    best = None
+    for lay in SMALL_LAYOUTS:
+        for df in enumerate_dataflows(wl, 256):
+            for tiling in tilings:
+                df_t = df.with_tiles(tiling) if tiling else df
+                m = evaluate(wl, df_t, lay, cfg)
+                if best is None or m.edp < best[0]:
+                    best = (m.edp, df_t, lay, m)
+    assert (got.dataflow, got.layout, got.metrics) == best[1:]
+
+
 def test_network_eval_fixed_layout_matches_scalar_loop():
     cfg = EvalConfig(reorder="none")
     layers = [ConvWorkload(M=64, C=32, P=14, Q=14, R=1, S=1, name="a"),
@@ -164,20 +304,52 @@ def test_network_eval_fixed_layout_matches_scalar_loop():
 
 
 # ------------------------------------------- planner: table path == scalar path
-@pytest.mark.parametrize("graph_fn,modes", [
-    (resnet50_graph, ("offchip",)),
-    (mobilenet_v3_graph, ("rir", "offchip")),
-    (lambda: bert_graph(layers_sampled=1), ("rir",)),
+@pytest.mark.parametrize("graph_fn,modes,tiles", [
+    (resnet50_graph, ("offchip",), False),
+    (mobilenet_v3_graph, ("rir", "offchip"), False),
+    (lambda: bert_graph(layers_sampled=1), ("rir",), False),
+    (mobilenet_v3_graph, ("rir", "offchip"), True),
 ])
-def test_planner_table_path_emits_identical_plan_json(graph_fn, modes):
+def test_planner_table_path_emits_identical_plan_json(graph_fn, modes, tiles):
     graph = graph_fn()
     cfg = EvalConfig()
     opts = PlannerOptions(switch_modes=modes, layouts=SMALL_LAYOUTS,
-                          parallel_dims=("C", "P", "Q"))
+                          parallel_dims=("C", "P", "Q"), search_tiles=tiles,
+                          max_tilings=3)
     fast = NetworkPlanner(graph, cfg, opts)
     slow = NetworkPlanner(graph, cfg, opts, use_lattice=False)
     assert fast.plan().to_json() == slow.plan().to_json()
     assert fast.greedy().to_json() == slow.greedy().to_json()
+
+
+@pytest.mark.slow
+def test_planner_table_path_identical_plan_json_tiled_resnet50():
+    graph = resnet50_graph()
+    opts = PlannerOptions(switch_modes=("rir", "offchip"),
+                          layouts=SMALL_LAYOUTS,
+                          parallel_dims=("C", "P", "Q"))
+    fast = NetworkPlanner(graph, EvalConfig(), opts)
+    slow = NetworkPlanner(graph, EvalConfig(), opts, use_lattice=False)
+    assert fast.plan().to_json() == slow.plan().to_json()
+
+
+def test_tiled_plan_objective_never_worse_than_untiled():
+    """Acceptance: the joint (dataflow x tile x layout) DP dominates the
+    untiled DP on every graph/hardware combination (default tiling always
+    injected into the searched space)."""
+    cfg = EvalConfig()
+    for graph_fn in (resnet50_graph, mobilenet_v3_graph,
+                     lambda: bert_graph(layers_sampled=1)):
+        graph = graph_fn()
+        for modes in (("rir", "offchip"), ("offchip",)):
+            base = dict(switch_modes=modes, layouts=SMALL_LAYOUTS,
+                        parallel_dims=("C", "P", "Q"))
+            tiled = NetworkPlanner(graph, cfg, PlannerOptions(**base)).plan()
+            untiled = NetworkPlanner(
+                graph, cfg,
+                PlannerOptions(**base, search_tiles=False)).plan()
+            assert tiled.total_cycles <= untiled.total_cycles, \
+                (graph.name, modes)
 
 
 # --------------------------------------------------------------- CI speed guard
@@ -186,9 +358,25 @@ def test_mobv3_full_plan_under_wall_time_budget():
     """Regression guard: a scalar-path fallback would take ~14s; the lattice
     path takes well under a second.  60s is generous for any sane machine."""
     opts = PlannerOptions(switch_modes=("rir", "offchip"),
-                          parallel_dims=("C", "P", "Q"))
+                          parallel_dims=("C", "P", "Q"), search_tiles=False)
     t0 = time.perf_counter()
     plan = NetworkPlanner(mobilenet_v3_graph(), EvalConfig(), opts).plan()
     elapsed = time.perf_counter() - t0
     assert len(plan.steps) == len(mobilenet_v3_graph())
     assert elapsed < 60.0, f"mobv3 planning took {elapsed:.1f}s (budget 60s)"
+
+
+@pytest.mark.slow
+def test_mobv3_tiled_full_plan_under_wall_time_budget():
+    """The tile axis multiplies the lattice by <= max_tilings+1; the full
+    joint (dataflow x tile x layout x mode) mobv3 plan must stay interactive."""
+    opts = PlannerOptions(switch_modes=("rir", "offchip"),
+                          parallel_dims=("C", "P", "Q"))
+    assert opts.search_tiles
+    t0 = time.perf_counter()
+    plan = NetworkPlanner(mobilenet_v3_graph(), EvalConfig(), opts).plan()
+    elapsed = time.perf_counter() - t0
+    assert len(plan.steps) == len(mobilenet_v3_graph())
+    assert any(s.tiles for s in plan.steps)
+    assert elapsed < 120.0, \
+        f"tiled mobv3 planning took {elapsed:.1f}s (budget 120s)"

@@ -1,0 +1,200 @@
+"""Tile axis through the artifact + execution layers.
+
+Covers the plan schema v2 (tile-carrying steps, v1 back-compat via the
+checked-in fixture), the tile-derived kernel block/grid shapes, and the
+batch-norm/bias fold through the executor's effective-weight hook point —
+all validated against the ``kernels/ref.py``-based oracles.
+"""
+import dataclasses
+import pathlib
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.dataflow import ConvWorkload
+from repro.core.layout import Layout
+from repro.core.layoutloop import EvalConfig
+from repro.core.workloads import init_graph_weights
+from repro.kernels import ref
+from repro.plan import (ExecutionPlan, NetworkPlanner, PlanError,
+                        PlannerOptions, execute_network,
+                        execute_network_reference, fold_batchnorm,
+                        from_layers, prepare_network, step_kernel_blocks)
+from repro.plan.executor import MIN_KERNEL_BLOCK
+from repro.plan.plan import PLAN_VERSION, RIR_BLOCK
+
+FIXTURE_V1 = pathlib.Path(__file__).parent / "goldens" / "plan_v1_fixture.json"
+SMALL_LAYOUTS = tuple(Layout.parse(s)
+                      for s in ("HWC_C32", "HWC_H32", "HWC_C4W8"))
+OPTS = dict(layouts=SMALL_LAYOUTS, parallel_dims=("C", "P", "Q"))
+
+
+def tiled_plan(graph, **kw):
+    opts = PlannerOptions(switch_modes=("rir",), **OPTS, **kw)
+    assert opts.search_tiles
+    return NetworkPlanner(graph, EvalConfig(), opts).plan()
+
+
+# ----------------------------------------------------------- schema v2 compat
+def test_v1_fixture_loads_and_roundtrips():
+    """A checked-in pre-tile (version 1) artifact must load — steps get the
+    default whole-tensor tiling — and round-trip losslessly."""
+    text = FIXTURE_V1.read_text()
+    plan = ExecutionPlan.from_json(text)
+    assert plan.version == 1
+    assert all(s.tiles == () for s in plan.steps)
+    assert all(s.dataflow.tiles == () for s in plan.steps)
+    again = ExecutionPlan.from_json(plan.to_json())
+    assert again == plan
+
+
+def test_v2_plan_carries_tiles_through_json():
+    graph = from_layers([
+        ConvWorkload(M=256, C=128, P=14, Q=14, R=3, S=3, name="big"),
+        ConvWorkload(M=128, C=256, P=14, Q=14, R=1, S=1, name="pw"),
+    ], "two")
+    plan = tiled_plan(graph)
+    assert plan.version == PLAN_VERSION == 2
+    assert any(s.tiles for s in plan.steps), "no layer chose a tiling"
+    for s in plan.steps:
+        assert s.tiles == s.dataflow.tiles
+    loaded = ExecutionPlan.from_json(plan.to_json())
+    assert loaded == plan
+    assert [s.tiles for s in loaded.steps] == [s.tiles for s in plan.steps]
+
+
+def test_unknown_plan_version_rejected():
+    text = FIXTURE_V1.read_text().replace('"version": 1', '"version": 99', 1)
+    with pytest.raises(ValueError, match="99"):
+        ExecutionPlan.from_json(text)
+
+
+# ------------------------------------------------------- tile-derived blocks
+def test_step_kernel_blocks_follow_the_tile():
+    wl = ConvWorkload(M=256, C=256, P=14, Q=14, R=3, S=3, name="l")
+    graph = from_layers([wl], "one")
+    plan = tiled_plan(graph)
+    step = plan.steps[0]
+    bm, bk = step_kernel_blocks(step)
+    assert MIN_KERNEL_BLOCK <= bm <= RIR_BLOCK
+    assert MIN_KERNEL_BLOCK <= bk <= RIR_BLOCK
+    # tile-less steps keep the full hardcoded block (v1 behaviour)
+    untiled = dataclasses.replace(step, tiles=())
+    assert step_kernel_blocks(untiled) == (RIR_BLOCK, RIR_BLOCK)
+    # a small tile shrinks the grid blocks (floored at MIN_KERNEL_BLOCK)
+    tiny = dataclasses.replace(
+        step, tiles=(("M", 16), ("C", 8), ("P", 2), ("Q", 2)))
+    assert step_kernel_blocks(tiny) == (MIN_KERNEL_BLOCK, MIN_KERNEL_BLOCK)
+    wide = dataclasses.replace(step, tiles=(("C", 64),))
+    assert step_kernel_blocks(wide) == (RIR_BLOCK, RIR_BLOCK)
+
+
+def test_tiled_plan_executes_bit_identical_to_untiled():
+    """The tile choice changes the kernel block/grid shape, never the math:
+    a tiled and an untiled plan over the same boundary layouts must produce
+    identical outputs."""
+    graph = from_layers([
+        ConvWorkload(M=256, C=128, P=16, Q=16, R=3, S=3, name="conv"),
+        ConvWorkload(M=128, C=256, P=16, Q=16, R=1, S=1, name="pw"),
+    ], "pair")
+    plan_t = tiled_plan(graph)
+    assert any(s.tiles for s in plan_t.steps)
+    plan_u = dataclasses.replace(
+        plan_t, steps=tuple(
+            dataclasses.replace(
+                s, tiles=(), dataflow=s.dataflow.with_tiles(()))
+            for s in plan_t.steps))
+    ws = init_graph_weights(list(graph.layers), seed=11)
+    rng = np.random.default_rng(12)
+    x = jnp.asarray(rng.normal(size=graph.input_shape()), jnp.float32)
+    y_ref = np.asarray(execute_network_reference(graph, x, ws))
+    for use_pallas in (True, False):
+        y_t = np.asarray(execute_network(plan_t, graph, x, ws,
+                                         use_pallas=use_pallas))
+        y_u = np.asarray(execute_network(plan_u, graph, x, ws,
+                                         use_pallas=use_pallas))
+        np.testing.assert_allclose(y_t, y_u, rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(y_t, y_ref, rtol=1e-4, atol=1e-3)
+
+
+# ------------------------------------------------------------ batch-norm fold
+def bn_params(rng, M):
+    return (jnp.asarray(rng.uniform(0.5, 1.5, M), jnp.float32),   # gamma
+            jnp.asarray(rng.normal(size=M), jnp.float32),         # beta
+            jnp.asarray(rng.normal(size=M), jnp.float32),         # mean
+            jnp.asarray(rng.uniform(0.2, 2.0, M), jnp.float32))   # var
+
+
+def test_fold_batchnorm_matches_ref_conv_bn_oracle():
+    """Acceptance oracle: executor with folded (w, bias) == ref.conv2d
+    followed by the textbook inference-BN expression."""
+    wl = ConvWorkload(M=128, C=64, P=14, Q=14, R=3, S=3, name="conv-bn")
+    graph = from_layers([wl], "one")
+    plan = tiled_plan(graph)
+    rng = np.random.default_rng(21)
+    (w,) = init_graph_weights([wl], seed=21)
+    gamma, beta, mean, var = bn_params(rng, wl.M)
+    conv_bias = jnp.asarray(rng.normal(size=wl.M), jnp.float32)
+    eps = 1e-5
+    w_fold, b_fold = fold_batchnorm(w, gamma, beta, mean, var, eps=eps,
+                                    conv_bias=conv_bias)
+
+    x = jnp.asarray(rng.normal(size=graph.input_shape()), jnp.float32)
+    y = np.asarray(execute_network(plan, graph, x, [w_fold],
+                                   biases=[b_fold]))
+    # the oracle: plain conv + bias, then BN with running stats
+    raw = ref.conv2d(x, jnp.asarray(w), wl.stride) + conv_bias
+    want = gamma * (raw - mean) / jnp.sqrt(var + eps) + beta
+    np.testing.assert_allclose(y, np.asarray(want), rtol=1e-4, atol=1e-3)
+    # and the reference executor agrees given the same folded params
+    y_ref = np.asarray(execute_network_reference(graph, x, [w_fold],
+                                                 biases=[b_fold]))
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-3)
+
+
+def test_fold_batchnorm_depthwise_and_residual_graph():
+    """BN folding composes with depthwise layers and residual joins."""
+    layers = [
+        ConvWorkload(M=64, C=32, P=14, Q=14, R=1, S=1, name="pw1"),
+        ConvWorkload(M=64, C=1, P=14, Q=14, R=3, S=3, name="dw"),
+        ConvWorkload(M=64, C=64, P=12, Q=12, R=1, S=1, name="pw2"),
+    ]
+    graph = from_layers(layers, "dw-res", skip_edges=((0, 2),))
+    plan = tiled_plan(graph)
+    ws = init_graph_weights(layers, seed=31)
+    rng = np.random.default_rng(32)
+    folded, biases = [], []
+    for wl, w in zip(layers, ws):
+        gamma, beta, mean, var = bn_params(rng, wl.M)
+        wf, bf = fold_batchnorm(w, gamma, beta, mean, var)
+        folded.append(wf)
+        biases.append(bf)
+    x = jnp.asarray(rng.normal(size=graph.input_shape()), jnp.float32)
+    relu = lambda t: jnp.maximum(t, 0)   # noqa: E731
+    y = np.asarray(execute_network(plan, graph, x, folded, biases=biases,
+                                   activation=relu))
+    y_ref = np.asarray(execute_network_reference(graph, x, folded,
+                                                 biases=biases,
+                                                 activation=relu))
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-3)
+
+
+def test_prepared_network_with_stale_biases_rejected():
+    wl = ConvWorkload(M=128, C=64, P=8, Q=8, R=1, S=1, name="pw")
+    graph = from_layers([wl], "one")
+    plan = tiled_plan(graph)
+    ws = init_graph_weights([wl], seed=41)
+    rng = np.random.default_rng(42)
+    bias = jnp.asarray(rng.normal(size=wl.M), jnp.float32)
+    prepared = prepare_network(plan, graph, ws, biases=[bias])
+    x = jnp.asarray(rng.normal(size=graph.input_shape()), jnp.float32)
+    y = execute_network(plan, graph, x, ws, prepared=prepared,
+                        biases=[bias])
+    assert y.shape == (wl.N, wl.P, wl.Q, wl.M)
+    with pytest.raises(PlanError, match="different"):
+        execute_network(plan, graph, x, ws, prepared=prepared,
+                        biases=[bias + 1.0])
+    with pytest.raises(PlanError, match="different"):
+        execute_network(plan, graph, x, ws, prepared=prepared)

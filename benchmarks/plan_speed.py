@@ -29,12 +29,17 @@ BENCH_PATH = pathlib.Path(__file__).resolve().parents[1] / \
 MODES = ("none", "rir", "offchip")
 # the lattice-vs-scalar identity comparison stays on the untiled space (the
 # scalar sweep over the tiled space would take minutes); the tile axis gets
-# its own sweep + plan entries below
+# its own sweep + plan entries below.  TILED keeps PR 4 semantics
+# (single-buffered) so the trajectory stays comparable; PIPELINED adds the
+# double-buffer axis.
 PLANNER_OPTS = PlannerOptions(switch_modes=("rir", "offchip"),
                               parallel_dims=("C", "P", "Q"),
-                              search_tiles=False)
+                              search_tiles=False, double_buffer=False)
 TILED_OPTS = PlannerOptions(switch_modes=("rir", "offchip"),
-                            parallel_dims=("C", "P", "Q"))
+                            parallel_dims=("C", "P", "Q"),
+                            double_buffer=False)
+PIPELINED_OPTS = PlannerOptions(switch_modes=("rir", "offchip"),
+                                parallel_dims=("C", "P", "Q"))
 
 
 def bench_layer_sweep(cfg: EvalConfig) -> dict:
@@ -104,6 +109,21 @@ def bench_tiled_plan(graph, cfg: EvalConfig) -> dict:
             "tiled_steps": sum(1 for s in tiled.steps if s.tiles)}
 
 
+def bench_pipelined_plan(graph, cfg: EvalConfig) -> dict:
+    """Double-buffered (ping-pong) planning vs the PR 4 single-buffered DP:
+    the cycle/stall win from overlapping tile refetch with compute."""
+    t0 = time.perf_counter()
+    pipe = NetworkPlanner(graph, cfg, PIPELINED_OPTS).plan()
+    t_pipe = time.perf_counter() - t0
+    tiled = NetworkPlanner(graph, cfg, TILED_OPTS).plan()
+    assert pipe.total_cycles <= tiled.total_cycles, graph.name
+    return {"layers": len(graph), "pipelined_s": t_pipe,
+            "pipelined_cycles": pipe.total_cycles,
+            "single_buffered_cycles": tiled.total_cycles,
+            "cycles_gain": tiled.total_cycles / pipe.total_cycles,
+            "db_steps": sum(1 for s in pipe.steps if s.double_buffer)}
+
+
 def run() -> dict:
     cfg = EvalConfig()
     entry = {
@@ -120,6 +140,10 @@ def run() -> dict:
         "plan_tiled": {
             "mobilenet_v3": bench_tiled_plan(mobilenet_v3_graph(), cfg),
             "resnet50": bench_tiled_plan(resnet50_graph(), cfg),
+        },
+        "plan_pipelined": {
+            "mobilenet_v3": bench_pipelined_plan(mobilenet_v3_graph(), cfg),
+            "resnet50": bench_pipelined_plan(resnet50_graph(), cfg),
         },
     }
     return entry
@@ -152,6 +176,11 @@ def main() -> dict:
         rows.append((f"plan_speed.tiled.{net}", r["tiled_s"] * 1e6,
                      f"us;cycles_gain_vs_untiled={r['cycles_gain']:.2f}x;"
                      f"tiled_steps={r['tiled_steps']}/{r['layers']}"))
+    for net, r in entry["plan_pipelined"].items():
+        rows.append((
+            f"plan_speed.pipelined.{net}", r["pipelined_s"] * 1e6,
+            f"us;cycles_gain_vs_single_buffered={r['cycles_gain']:.2f}x;"
+            f"db_steps={r['db_steps']}/{r['layers']}"))
     emit(rows)
     return entry
 

@@ -242,16 +242,27 @@ def assess_iact_conflicts_lattice(wl: ConvWorkload,
     its conflict profile genuinely differs from the untiled one — and every
     cell is numerically identical to the scalar ``assess_iact_conflicts``
     call on ``df.with_tiles(tiling)``.
+
+    Ping-pong tilings (the ``PING_PONG``-tagged twins ``enumerate_tilings``
+    emits) change the capacity/overlap model but not the access pattern, so
+    a tagged and an untagged tiling with the same extents share one grid
+    pass — the double-buffer axis costs the conflict sweep nothing.
     """
     reliefs = tuple(reliefs)
     nd, nt, nl = len(dataflows), len(tilings), len(layouts)
     out = {r: (np.ones((nd, nt, nl)), np.zeros((nd, nt, nl)))
            for r in reliefs}
+    grids: Dict[Dataflow, Dict[str, List[ConflictReport]]] = {}
     for di, df in enumerate(dataflows):
         for ti, tiling in enumerate(tilings):
             df_t = df.with_tiles(tiling) if tiling else df
-            grid = assess_iact_conflicts_grid(wl, df_t, layouts, buffer,
-                                              reliefs, max_samples)
+            df_key = dataclasses.replace(df_t, double_buffer=False)
+            grid = grids.get(df_key)
+            if grid is None:
+                grid = assess_iact_conflicts_grid(wl, df_key, layouts,
+                                                  buffer, reliefs,
+                                                  max_samples)
+                grids[df_key] = grid
             for r in reliefs:
                 sd, al = out[r]
                 for li, rep in enumerate(grid[r]):

@@ -19,6 +19,14 @@ from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
 CONV_DIMS = ("N", "M", "C", "P", "Q", "R", "S")
 GEMM_DIMS = ("M", "N", "K")
 
+# Pseudo-dim tag a tiling tuple may carry to mark a ping-pong (double-
+# buffered) tiling: ``Dataflow.with_tiles`` strips it into the
+# ``double_buffer`` field, so ``Dataflow.tiles`` itself only ever holds real
+# workload dims.  Lattice tile axes (``enumerate_tilings`` output) use the
+# tagged tuples directly — a tagged and an untagged tiling with the same
+# extents are distinct search points with different cost/capacity models.
+PING_PONG = "2B"
+
 
 @dataclasses.dataclass(frozen=True)
 class ConvWorkload:
@@ -83,6 +91,8 @@ class Dataflow:
     order: Tuple[str, ...] = CONV_DIMS            # temporal order, outer->inner
     tiles: Tuple[Tuple[str, int], ...] = ()       # on-chip tile sizes (T)
     name: str = ""
+    double_buffer: bool = False   # ping-pong tile buffers: refetch overlaps
+    # compute (half the buffer holds the live tile, half the next fetch)
 
     def spatial_product(self) -> int:
         return math.prod(f for _, f in self.spatial) if self.spatial else 1
@@ -99,12 +109,23 @@ class Dataflow:
         lbl = "|".join(f"{d}{f}" for d, f in self.spatial)
         if self.tiles:
             lbl += "@" + "".join(f"{d}{t}" for d, t in self.tiles)
+        if self.double_buffer:
+            lbl += f"@{PING_PONG}"
         return lbl
 
     def with_tiles(self, tiles: Sequence[Tuple[str, int]]) -> "Dataflow":
         """The same TOPS point with on-chip tile sizes ``tiles`` (a searched
-        coordinate: distinct tilings are distinct lattice points)."""
-        return dataclasses.replace(self, tiles=tuple(tiles))
+        coordinate: distinct tilings are distinct lattice points).
+
+        A ``(PING_PONG, 1)`` entry in ``tiles`` marks the ping-pong variant
+        of the tiling; it is stripped into ``double_buffer`` so the stored
+        ``tiles`` only ever name real workload dims.
+        """
+        tiles = tuple(tiles)
+        db = any(d == PING_PONG for d, _ in tiles)
+        return dataclasses.replace(
+            self, tiles=tuple((d, f) for d, f in tiles if d != PING_PONG),
+            double_buffer=db)
 
     # --------------------------------------------------------------- analysis
     def theoretical_utilization(self, wl: ConvWorkload, num_pes: int) -> float:
@@ -240,7 +261,7 @@ def tile_traffic_words(wl: ConvWorkload, extents: Mapping[str, int]) -> float:
 def enumerate_tilings(wl: ConvWorkload, df: Optional[Dataflow],
                       buffer_bytes: int, dtype_bytes: int = 1,
                       tile_dims: Sequence[str] = ("M", "C", "P", "Q"),
-                      max_tilings: int = 8
+                      max_tilings: int = 8, ping_pong: bool = True
                       ) -> Iterator[Tuple[Tuple[str, int], ...]]:
     """Pruned on-chip tile-size candidates for one layer.
 
@@ -252,6 +273,13 @@ def enumerate_tilings(wl: ConvWorkload, df: Optional[Dataflow],
     (component-wise ≥ tile sizes ⇒ component-wise ≥ reuse), capped at
     ``max_tilings`` preferring the largest working sets (closest to filling
     the buffer, i.e. most reuse per byte).
+
+    With ``ping_pong`` (the default), a second arm of candidates trades half
+    the buffer for ping-pong space: the maximal tilings feasible in
+    ``buffer_bytes / 2`` are emitted tagged ``(PING_PONG, 1)`` — the cost
+    model (``layoutloop.tile_dram_terms``) charges them half the resident
+    capacity but overlaps their refetch traffic with compute.  Each arm is
+    capped at ``max_tilings`` independently.
 
     ``df`` (optional) lower-bounds each dim's tile at its spatial unroll
     factor; pass ``None`` for a tile axis shared across many dataflows —
@@ -279,28 +307,39 @@ def enumerate_tilings(wl: ConvWorkload, df: Optional[Dataflow],
         return tile_working_set(wl, ext)
 
     nxt = [{v: c[i + 1] for i, v in enumerate(c[:-1])} for c in cands]
-    # keep only maximal (Pareto) tilings: larger tiles always mean ≥ reuse,
-    # so anything dominated by another feasible tiling is dead weight.
-    # Working set is monotone in every tile size, so a feasible combo is
-    # dominated iff bumping some single dim to its next candidate stays
-    # feasible — an O(dims) test instead of an O(candidates^2) sweep.
-    maximal: List[Tuple[int, ...]] = []
-    for combo in itertools.product(*cands):
-        if ws(combo) > cap_words:
-            continue
-        bumped = (combo[:i] + (nxt[i][v],) + combo[i + 1:]
-                  for i, v in enumerate(combo) if v in nxt[i])
-        if all(ws(b) > cap_words for b in bumped):
-            maximal.append(combo)
 
-    maximal.sort(key=lambda c: (-ws(c), c))
+    def maximal_tilings(cap: int) -> List[Tuple[Tuple[str, int], ...]]:
+        # keep only maximal (Pareto) tilings: larger tiles always mean
+        # ≥ reuse, so anything dominated by another feasible tiling is dead
+        # weight.  Working set is monotone in every tile size, so a feasible
+        # combo is dominated iff bumping some single dim to its next
+        # candidate stays feasible — an O(dims) test instead of an
+        # O(candidates^2) sweep.
+        maximal: List[Tuple[int, ...]] = []
+        for combo in itertools.product(*cands):
+            if ws(combo) > cap:
+                continue
+            bumped = (combo[:i] + (nxt[i][v],) + combo[i + 1:]
+                      for i, v in enumerate(combo) if v in nxt[i])
+            if all(ws(b) > cap for b in bumped):
+                maximal.append(combo)
+        maximal.sort(key=lambda c: (-ws(c), c))
+        return [tuple((d, v) for d, v in zip(tile_dims, combo)
+                      if v < dims[d])
+                for combo in maximal[:max_tilings]]
+
     emitted = {()}
-    for combo in maximal[:max_tilings]:
-        tiling = tuple((d, v) for d, v in zip(tile_dims, combo)
-                       if v < dims[d])
+    for tiling in maximal_tilings(cap_words):
         if tiling not in emitted:
             emitted.add(tiling)
             yield tiling
+    if not ping_pong:
+        return
+    for tiling in maximal_tilings(max(1, cap_words // 2)):
+        tagged = tiling + ((PING_PONG, 1),)
+        if tagged not in emitted:
+            emitted.add(tagged)
+            yield tagged
 
 
 def enumerate_dataflows(wl: ConvWorkload, num_pes: int,

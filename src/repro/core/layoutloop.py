@@ -13,6 +13,25 @@ Two evaluation paths produce bit-identical numbers:
   scalar oracle, kept deliberately simple.  The on-chip tiling rides on
   ``Dataflow.tiles`` and drives the DRAM reuse/capacity terms
   (``tile_dram_terms``) plus the conflict sample bases.
+
+**The tile pipeline model** (``tile_dram_terms`` + ``exposed_stall_cycles``):
+off-chip traffic splits into the mandatory one-pass stream (``tensor`` bytes,
+assumed hidden under the compute pipeline — the streaming the Nest is
+designed for) and the refetch beyond it.  Single-buffered tilings
+(``Dataflow.double_buffer`` False) expose ALL refetch serially at the layer
+end — the PR 4 model, preserved bit-for-bit.  Double-buffered (ping-pong)
+tilings devote half the buffer to the next tile's fetch, so execution is a
+steady-state pipeline over the ``n_tiles`` outer-tile steps: the exposed
+stall is one **prologue fill** (the first tile's fetch beyond its hidden
+stream share, ``tile_mem - tile_base``) plus, per steady tile, only the
+overhang ``max(0, tile_mem - max(tile_base, tile_compute))`` that neither
+the hidden stream credit nor the overlapped compute covers.  Because the
+steady overhang never exceeds the serial per-tile charge, a double-buffered
+tiling is never costlier than the same tiling single-buffered whenever its
+working set still fits the halved resident capacity — the planner's argmin
+moves toward aggressive tilings whose refetch streams for free, exactly the
+"switching under the hood" the paper argues for (§IV's ping-pong Nest
+buffers).
 * ``evaluate_lattice``  — the full 4-D (dataflow x tile x layout x mode)
   candidate lattice in a handful of vectorized numpy passes: conflict
   statistics come from ``conflicts.assess_iact_conflicts_lattice`` (temporal
@@ -131,9 +150,28 @@ def reorder_overhead(wl: ConvWorkload, cfg: EvalConfig, mode: str,
     raise ValueError(f"unknown reorder mode {mode!r}")
 
 
+@dataclasses.dataclass(frozen=True)
+class TileDramTerms:
+    """Memory-side pipeline terms of one (workload, tiled dataflow) point.
+
+    ``exposed_stall_cycles`` turns these into the exposed latency given the
+    point's compute cycles; keeping the two separate lets the 4-D lattice
+    compute the (layout, mode)-dependent overlap as one array expression
+    while sharing these per-(dataflow, tile) scalars with the scalar path.
+    """
+
+    traffic_bytes: float        # total off-chip traffic incl. spill factor
+    serial_stall_cycles: float  # PR-4 charge: all beyond-one-pass, serial
+    n_tiles: int                # outer-tile iterations of the tile loop
+    tile_mem_cycles: float      # per-tile DRAM cycles (traffic / n / BW)
+    tile_base_cycles: float     # per-tile share of the hidden one-pass stream
+    prologue_cycles: float      # first tile's fetch beyond its stream share
+    double_buffer: bool
+
+
 def tile_dram_terms(wl: ConvWorkload, df: Dataflow, cfg: EvalConfig
-                    ) -> Tuple[float, float]:
-    """(off-chip traffic bytes, exposed stall cycles) for ``df``'s tiling.
+                    ) -> TileDramTerms:
+    """Off-chip traffic + steady-state pipeline terms for ``df``'s tiling.
 
     The layer's effective tile (``dataflow.tile_extents``: declared tiles
     clamped into [spatial factor, dim]) determines two things the untiled
@@ -142,27 +180,63 @@ def tile_dram_terms(wl: ConvWorkload, df: Dataflow, cfg: EvalConfig
     * **reuse** — each tensor is re-fetched per outer-tile iteration over
       the dims it does not index (``tile_traffic_words``), and
     * **capacity** — a tile whose working set overflows the on-chip buffer
-      thrashes: all traffic is scaled by the overflow factor (the default
-      whole-tensor tiling of a large layer pays this, which is exactly what
-      a capacity-feasible tiling buys its refetch multipliers back against).
+      thrashes: all traffic is scaled by the overflow factor.  A ping-pong
+      tiling (``df.double_buffer``) only has HALF the buffer resident — the
+      other half holds the next tile in flight — so its spill factor is
+      taken against the halved capacity.
 
-    Only traffic *beyond* the mandatory one-pass streaming (which the
-    compute pipeline hides) is exposed as stall cycles.  Both the scalar
-    ``evaluate`` and the 4-D lattice call this helper, so the two paths stay
-    bit-identical by construction.
+    The mandatory one-pass stream (``tensor_bytes``) is hidden under the
+    compute pipeline in both buffering regimes.  ``serial_stall_cycles`` is
+    the single-buffered exposure (all refetch at the layer end, the PR 4
+    model, preserved bit-for-bit); the per-tile terms feed
+    ``exposed_stall_cycles`` for the double-buffered pipeline.  Both the
+    scalar ``evaluate`` and the 4-D lattice call these helpers, so the two
+    paths stay bit-identical by construction.
     """
     ext = tile_extents(wl, df)
     traffic_words = tile_traffic_words(wl, ext)
-    spill = max(1.0, tile_working_set(wl, ext)
-                / (cfg.buffer.num_lines * cfg.buffer.line_size))
+    capacity = cfg.buffer.num_lines * cfg.buffer.line_size
+    if df.double_buffer:
+        capacity = capacity / 2    # ping-pong: half holds the live tile
+    spill = max(1.0, tile_working_set(wl, ext) / capacity)
     traffic_bytes = traffic_words * cfg.dtype_bytes * spill
     iact_words = math.prod(wl.iact_dims().values())
     w_words = math.prod(wl.weight_dims().values())
     oact_words = math.prod(wl.oact_dims().values())
     tensor_bytes = (iact_words + w_words + oact_words) * cfg.dtype_bytes
-    stall = max(0.0, (traffic_bytes - tensor_bytes)
-                / cfg.dram_bytes_per_cycle)
-    return traffic_bytes, stall
+    serial = max(0.0, (traffic_bytes - tensor_bytes)
+                 / cfg.dram_bytes_per_cycle)
+    dims = wl.dims()
+    n_tiles = math.prod(math.ceil(dims[d] / ext[d]) for d in dims)
+    tile_mem = traffic_bytes / n_tiles / cfg.dram_bytes_per_cycle
+    tile_base = tensor_bytes / n_tiles / cfg.dram_bytes_per_cycle
+    return TileDramTerms(
+        traffic_bytes=traffic_bytes, serial_stall_cycles=serial,
+        n_tiles=n_tiles, tile_mem_cycles=tile_mem,
+        tile_base_cycles=tile_base,
+        prologue_cycles=max(0.0, tile_mem - tile_base),
+        double_buffer=df.double_buffer)
+
+
+def exposed_stall_cycles(terms: TileDramTerms, compute_cycles: float
+                         ) -> float:
+    """Exposed DRAM stall of one lattice point, given its compute cycles.
+
+    Single-buffered: the PR 4 serial charge (all refetch traffic exposed at
+    the layer end).  Double-buffered: a steady-state ping-pong pipeline over
+    the ``n_tiles`` outer-tile steps — one prologue fill (the first tile's
+    fetch cannot overlap anything) plus, per steady tile, only the overhang
+    of the tile's fetch beyond what the hidden one-pass stream credit and
+    the overlapped compute cover.  The steady overhang is bounded by the
+    serial per-tile charge (``max(tile_base, c) >= tile_base``), so for the
+    same traffic the double-buffered exposure never exceeds the serial one.
+    """
+    if not terms.double_buffer:
+        return terms.serial_stall_cycles
+    per_tile_compute = compute_cycles / terms.n_tiles
+    hidden = max(terms.tile_base_cycles, per_tile_compute)
+    steady = max(0.0, terms.tile_mem_cycles - hidden)
+    return terms.prologue_cycles + (terms.n_tiles - 1) * steady
 
 
 def evaluate(wl: ConvWorkload, df: Dataflow, layout: Layout,
@@ -184,7 +258,9 @@ def evaluate(wl: ConvWorkload, df: Dataflow, layout: Layout,
     util = timing.steady_utilization / rep.slowdown
 
     oact_words = math.prod(wl.oact_dims().values())
-    traffic_bytes, dram_stall = tile_dram_terms(wl, df, cfg)
+    terms = tile_dram_terms(wl, df, cfg)
+    traffic_bytes = terms.traffic_bytes
+    dram_stall = exposed_stall_cycles(terms, compute_cycles)
 
     active_cycles = max(1.0, timing.total_cycles - timing.weight_load_cycles)
     line_reads = rep.avg_lines_per_cycle * active_cycles          # iActs
@@ -294,8 +370,10 @@ def evaluate_lattice(wl: ConvWorkload, dataflows: Sequence[Dataflow],
     (dataflow, tiling) — ``Dataflow.sample_table`` memoizes on the tiled
     dataflow — conflict statistics once per (dataflow, tiling, layout,
     *relief*) with every mode mapping to the same read-side relief sharing
-    them, the per-(dataflow, tiling) DRAM traffic/stall terms come from the
-    same ``tile_dram_terms`` helper the scalar path calls, and the nest
+    them, the per-(dataflow, tiling) DRAM pipeline terms come from the same
+    ``tile_dram_terms`` helper the scalar path calls (the double-buffered
+    overlap against each point's compute cycles is one array expression
+    mirroring ``exposed_stall_cycles``), and the nest
     timing, reorder overhead and energy rollup are single array expressions
     over the whole lattice, written to mirror the scalar path's float
     operations exactly.  ``tilings`` defaults to the single whole-tensor
@@ -321,15 +399,25 @@ def evaluate_lattice(wl: ConvWorkload, dataflows: Sequence[Dataflow],
         slowdown[:, :, :, mi] = sd
         avg_lines[:, :, :, mi] = al
     traffic_b = np.zeros((nd, nt))          # off-chip bytes incl. spill
-    dram_stall = np.zeros((nd, nt))         # exposed refetch latency
     dram_pj = np.zeros((nd, nt))            # e.dram_bytes_pj(traffic_b)
+    serial_stall = np.zeros((nd, nt))       # single-buffered exposure
+    tile_mem = np.zeros((nd, nt))           # per-tile pipeline terms
+    tile_base = np.zeros((nd, nt))
+    prologue = np.zeros((nd, nt))
+    n_tiles = np.ones((nd, nt))
+    db_mask = np.zeros((nd, nt), bool)
     for di, df in enumerate(dataflows):
         for ti, tiling in enumerate(tilings):
             df_t = df.with_tiles(tiling) if tiling else df
-            tb, stall = tile_dram_terms(wl, df_t, cfg)
-            traffic_b[di, ti] = tb
-            dram_stall[di, ti] = stall
-            dram_pj[di, ti] = e.dram_bytes_pj(tb)
+            terms = tile_dram_terms(wl, df_t, cfg)
+            traffic_b[di, ti] = terms.traffic_bytes
+            dram_pj[di, ti] = e.dram_bytes_pj(terms.traffic_bytes)
+            serial_stall[di, ti] = terms.serial_stall_cycles
+            tile_mem[di, ti] = terms.tile_mem_cycles
+            tile_base[di, ti] = terms.tile_base_cycles
+            prologue[di, ti] = terms.prologue_cycles
+            n_tiles[di, ti] = terms.n_tiles
+            db_mask[di, ti] = terms.double_buffer
 
     # nest timing (``nest_cycles`` in array form over the slowdown axis);
     # the tile axis does not move the steady/utilization terms
@@ -341,6 +429,17 @@ def evaluate_lattice(wl: ConvWorkload, dataflows: Sequence[Dataflow],
     load = cfg.nest.ah ** 2
     compute = (steady[:, None, None, None] + fill) * slowdown + load
     util = util_theo[:, None, None, None] / slowdown
+
+    # ``exposed_stall_cycles`` in array form: the double-buffered overlap
+    # depends on the point's compute cycles, so the stall is a true 4-D
+    # quantity; the op order mirrors the scalar helper exactly
+    per_tile_compute = compute / n_tiles[:, :, None, None]
+    hidden = np.maximum(tile_base[:, :, None, None], per_tile_compute)
+    steady_stall = np.maximum(0.0, tile_mem[:, :, None, None] - hidden)
+    pipe_stall = prologue[:, :, None, None] \
+        + (n_tiles - 1.0)[:, :, None, None] * steady_stall
+    dram_stall = np.where(db_mask[:, :, None, None], pipe_stall,
+                          serial_stall[:, :, None, None])
 
     oact_words = math.prod(wl.oact_dims().values())
     oact_lines = max(1.0, oact_words / cfg.buffer.line_size)
@@ -384,15 +483,14 @@ def evaluate_lattice(wl: ConvWorkload, dataflows: Sequence[Dataflow],
         + dram_pj[:, :, None, None]
         + ro_energy[None, None, None, :]
     )
-    cycles = compute + ro_cycles + dram_stall[:, :, None, None]
+    cycles = compute + ro_cycles + dram_stall
     return LatticeMetrics(
         workload=wl, dataflows=dataflows, tilings=tilings, layouts=layouts,
         modes=modes, cycles=cycles, compute_cycles=compute,
         reorder_cycles=ro_cycles, slowdown=slowdown, utilization=util,
         energy_pj=energy, dram_bytes=dram_bytes, line_reads=line_reads,
         pj_per_mac=energy / max(macs, 1),
-        dram_stall_cycles=np.broadcast_to(
-            dram_stall[:, :, None, None], (nd, nt, nl, nm)))
+        dram_stall_cycles=dram_stall)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -14,39 +14,43 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def _plan_for(cfg, args) -> None:
+def _plan_for(cfg, args):
     """Load (or co-search and save) the network execution plan for this arch.
 
-    The plan artifact records per-layer (dataflow, layout, reorder, kernel,
-    epilogue perm); a stale artifact (graph hash mismatch, e.g. after a
-    config change) is re-planned and overwritten.
+    The load-or-replan logic is ``PlanCache.get_or_plan``: the ``--plan``
+    artifact is seeded into an in-memory cache, so a valid matching file is
+    a hit while a corrupt or stale one (graph hash / config mismatch, e.g.
+    after a config change) occupies the wrong key, misses, and is re-planned
+    and overwritten.  Returns the ``ExecutionPlan``.
     """
     from repro.core.layoutloop import EvalConfig
-    from repro.plan import (ExecutionPlan, NetworkPlanner, PlannerOptions,
-                            config_key, from_arch_config)
+    from repro.plan import (ExecutionPlan, NetworkPlanner, PlanCache,
+                            PlannerOptions, from_arch_config)
 
     graph = from_arch_config(cfg, seq=args.prompt_len + args.gen)
     eval_cfg = EvalConfig()
     opts = PlannerOptions(switch_modes=("rir",), parallel_dims=("C", "P", "Q"))
-    want_key = config_key(eval_cfg, opts.key())
     path = pathlib.Path(args.plan)
-    plan = None
+    cache = PlanCache()
     if path.exists():
         try:
-            plan = ExecutionPlan.load(path)
+            cache.put(ExecutionPlan.load(path))
         except Exception as e:  # unreadable/corrupt/foreign-version artifact
             print(f"[serve] plan {path} is unreadable ({e}); re-planning")
-        else:
-            if (plan.graph_hash, plan.config_key) != \
-                    (graph.graph_hash(), want_key):
-                print(f"[serve] plan {path} is stale (graph/config "
-                      "mismatch); re-planning")
-                plan = None
-    if plan is None:
-        plan = NetworkPlanner(graph, eval_cfg, opts).plan()
+
+    replanned = []
+
+    def planner_fn(g, c):
+        replanned.append(True)
+        return NetworkPlanner(g, c, opts).plan()
+
+    plan = cache.get_or_plan(graph, eval_cfg, planner_fn,
+                             extra_key=opts.key())
+    if replanned:
         plan.save(path)
         print(f"[serve] planned {len(plan)} layers -> {path}")
     print(plan.summary())
+    return plan
 
 
 def main() -> None:
@@ -71,12 +75,14 @@ def main() -> None:
         _plan_for(cfg, args)
     model = build_model(cfg)
     mesh = make_local_mesh(args.model_axis)
-    key = jax.random.PRNGKey(0)
-    params = model.init(key)
+    # independent streams: reusing one key for params AND data would
+    # correlate the prompt draw with the init draw
+    init_key, data_key = jax.random.split(jax.random.PRNGKey(0))
+    params = model.init(init_key)
     max_seq = args.prompt_len + args.gen
 
     B = args.batch
-    prompts = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab)
+    prompts = jax.random.randint(data_key, (B, args.prompt_len), 0, cfg.vocab)
 
     decode = jax.jit(model.decode_step, donate_argnums=(1,))
     with mesh:

@@ -80,12 +80,17 @@ def step_kernel_blocks(step: PlanStep, block: int = RIR_BLOCK
     reduction elements (``C`` tile x taps) one pass keeps resident, so the
     kernel's block/grid shape follows the artifact instead of a hardcoded
     constant: the largest power of two under the tile extent, clamped into
-    ``[MIN_KERNEL_BLOCK, block]``.  Tile-less steps (v1 artifacts, untiled
-    plans) keep the full ``block`` — the pre-tiling behaviour.  The output
-    feature axis always stays at ``block``: epilogue permutations are
-    defined over ``RIR_BLOCK``-wide boundary-layout blocks.
+    ``[MIN_KERNEL_BLOCK, block]``.  A double-buffered step (schema v3) only
+    keeps HALF the tile resident per ping-pong phase, so the row extent
+    absorbs one halving before the pow-2 floor (halving a single axis
+    halves the block footprint, matching the cost model's halved
+    capacity).  Tile-less single-buffered
+    steps (v1 artifacts, untiled plans) keep the full ``block`` — the
+    pre-tiling behaviour.  The output feature axis always stays at
+    ``block``: epilogue permutations are defined over ``RIR_BLOCK``-wide
+    boundary-layout blocks.
     """
-    if not step.tiles:
+    if not step.tiles and not step.double_buffer:
         return block, block
     wl = step.workload
     t = dict(step.tiles)
@@ -95,6 +100,8 @@ def step_kernel_blocks(step: PlanStep, block: int = RIR_BLOCK
 
     rows = ext("N", wl.N) * ext("P", wl.P) * ext("Q", wl.Q)
     kdim = ext("C", wl.C) * wl.R * wl.S
+    if step.double_buffer:
+        rows = max(1, rows // 2)
     bm = max(MIN_KERNEL_BLOCK, min(block, _pow2_floor(rows)))
     bk = max(MIN_KERNEL_BLOCK, min(block, _pow2_floor(kdim)))
     return bm, bk

@@ -18,11 +18,14 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.dataflow import ConvWorkload, Dataflow
 from repro.core.layoutloop import EvalConfig
 
-# v2 adds the planned on-chip tiling (``PlanStep.tiles`` + the dataflow's
-# ``tiles`` coordinate); tile-less v1 artifacts load with the default
-# whole-tensor tiling, which executes exactly as before.
-PLAN_VERSION = 2
-COMPAT_VERSIONS = (1, 2)
+# v2 added the planned on-chip tiling (``PlanStep.tiles`` + the dataflow's
+# ``tiles`` coordinate); v3 adds the double-buffer choice
+# (``PlanStep.double_buffer`` + ``Dataflow.double_buffer``) — the ping-pong
+# tile pipeline that overlaps refetch with compute.  Older artifacts load
+# with the default: v1 steps get the whole-tensor tiling, v1/v2 steps are
+# single-buffered, both executing exactly as before.
+PLAN_VERSION = 3
+COMPAT_VERSIONS = (1, 2, 3)
 RIR_BLOCK = 128   # kernel feature-block granularity (MXU lane width)
 
 
@@ -40,6 +43,7 @@ def dataflow_to_dict(df: Dataflow) -> Dict:
     return {"spatial": [list(p) for p in df.spatial],
             "order": list(df.order),
             "tiles": [list(p) for p in df.tiles],
+            "double_buffer": df.double_buffer,
             "name": df.name}
 
 
@@ -47,6 +51,7 @@ def dataflow_from_dict(d: Dict) -> Dataflow:
     return Dataflow(spatial=tuple((x, int(f)) for x, f in d["spatial"]),
                     order=tuple(d["order"]),
                     tiles=tuple((x, int(f)) for x, f in d.get("tiles", ())),
+                    double_buffer=bool(d.get("double_buffer", False)),
                     name=d["name"])
 
 
@@ -121,6 +126,7 @@ class PlanStep:
     lowering: str = "gemm"         # gemm | im2col | depthwise (K-side transform)
     joins: Tuple[JoinSpec, ...] = ()   # skip edges adding at the out boundary
     tiles: Tuple[Tuple[str, int], ...] = ()   # planned on-chip tiling (v2)
+    double_buffer: bool = False    # ping-pong tile buffers planned (v3)
 
     def to_dict(self) -> Dict:
         return {"layer": self.layer,
@@ -133,13 +139,16 @@ class PlanStep:
                 "cycles": self.cycles, "energy_pj": self.energy_pj,
                 "lowering": self.lowering,
                 "joins": [j.to_dict() for j in self.joins],
-                "tiles": [list(p) for p in self.tiles]}
+                "tiles": [list(p) for p in self.tiles],
+                "double_buffer": self.double_buffer}
 
     @staticmethod
     def from_dict(d: Dict) -> "PlanStep":
         # v1 steps carry no "tiles" key: fall back to the dataflow's tiling
-        # (empty in v1 artifacts == the default whole-tensor tiling)
+        # (empty in v1 artifacts == the default whole-tensor tiling); v1/v2
+        # steps carry no "double_buffer" and load single-buffered
         tiles = d.get("tiles", d["dataflow"].get("tiles", ()))
+        db = d.get("double_buffer", d["dataflow"].get("double_buffer", False))
         return PlanStep(
             layer=d["layer"], workload=workload_from_dict(d["workload"]),
             dataflow=dataflow_from_dict(d["dataflow"]),
@@ -150,7 +159,8 @@ class PlanStep:
             cycles=float(d["cycles"]), energy_pj=float(d["energy_pj"]),
             lowering=d.get("lowering", "gemm"),
             joins=tuple(JoinSpec.from_dict(j) for j in d.get("joins", ())),
-            tiles=tuple((x, int(f)) for x, f in tiles))
+            tiles=tuple((x, int(f)) for x, f in tiles),
+            double_buffer=bool(db))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -250,12 +260,28 @@ class PlanCache:
         return self._dir / f"plan-{key[0][:16]}-{key[1][:16]}.json"
 
     def get(self, graph_hash: str, cfg_key: str) -> Optional[ExecutionPlan]:
+        """Cached plan for the FULL ``(graph_hash, cfg_key)``, or ``None``.
+
+        The on-disk filename only encodes truncated hashes, so a loaded
+        artifact is re-validated against the full key: a corrupt/unreadable
+        file or one whose recorded identity mismatches (hash collision,
+        hand-edited artifact) is deleted and treated as a miss — ``get``
+        never raises on bad cache contents and never returns a plan for a
+        different (graph, config).
+        """
         key = (graph_hash, cfg_key)
         if key in self._mem:
             return self._mem[key]
         p = self._path(key)
         if p and p.exists():
-            plan = ExecutionPlan.load(p)
+            try:
+                plan = ExecutionPlan.load(p)
+            except (ValueError, KeyError, TypeError, OSError):
+                p.unlink(missing_ok=True)   # corrupt artifact: re-plan
+                return None
+            if (plan.graph_hash, plan.config_key) != key:
+                p.unlink(missing_ok=True)   # truncated-name collision
+                return None
             self._mem[key] = plan
             return plan
         return None

@@ -53,6 +53,11 @@ class PlannerOptions:
     (``core.dataflow.enumerate_tilings``, at most ``max_tilings``
     capacity-feasible candidates over ``tile_dims``); the default tiling is
     always injected, so the tiled DP never loses to the untiled one.
+    ``double_buffer`` additionally enumerates each layer's ping-pong
+    tilings — half the buffer traded for overlap of tile refetch with
+    compute — as extra lattice points; the single-buffered candidates stay
+    in the space, so the double-buffered DP never loses to the
+    single-buffered one either.
     """
 
     objective: str = "cycles"
@@ -69,6 +74,7 @@ class PlannerOptions:
     search_tiles: bool = True
     max_tilings: int = 8
     tile_dims: Tuple[str, ...] = ("M", "C", "P", "Q")
+    double_buffer: bool = True
 
     def key(self) -> str:
         return repr(self)
@@ -154,7 +160,8 @@ class NetworkPlanner:
         if opts.search_tiles:
             self._tilings = {i: tuple(enumerate_tilings(
                 wl, None, cap_bytes, cfg.dtype_bytes,
-                tile_dims=opts.tile_dims, max_tilings=opts.max_tilings))
+                tile_dims=opts.tile_dims, max_tilings=opts.max_tilings,
+                ping_pong=opts.double_buffer))
                 for i, wl in enumerate(graph.layers)}
         else:
             self._tilings = {i: ((),) for i in range(len(graph))}
@@ -396,7 +403,8 @@ class NetworkPlanner:
                 in_layout=l_in, out_layout=l_out, reorder=choice.mode,
                 kernel="rir_matmul", epilogue_perm=perm, lowering=lowering,
                 joins=joins, cycles=choice.metrics.cycles,
-                energy_pj=choice.metrics.energy_pj, tiles=choice.tiles))
+                energy_pj=choice.metrics.energy_pj, tiles=choice.tiles,
+                double_buffer=choice.dataflow.double_buffer))
         return ExecutionPlan(
             graph_name=self.graph.name, graph_hash=self.graph.graph_hash(),
             config_key=config_key(self.cfg, self.opts.key()),

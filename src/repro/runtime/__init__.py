@@ -1,5 +1,6 @@
-from .fault_tolerance import (ElasticPlan, HeartbeatRegistry, StragglerMonitor,
+from .fault_tolerance import (STEP_FAULT_TYPES, ElasticPlan,
+                              HeartbeatRegistry, StragglerMonitor,
                               TrainSupervisor, plan_elastic_mesh)
 
-__all__ = ["ElasticPlan", "HeartbeatRegistry", "StragglerMonitor",
-           "TrainSupervisor", "plan_elastic_mesh"]
+__all__ = ["STEP_FAULT_TYPES", "ElasticPlan", "HeartbeatRegistry",
+           "StragglerMonitor", "TrainSupervisor", "plan_elastic_mesh"]

@@ -24,6 +24,14 @@ import math
 import time
 from typing import Callable, Dict, List, Sequence, Set, Tuple
 
+# Failure types the restart loop treats as node/runtime faults and recovers
+# from: XLA device errors surface as RuntimeError, collective timeouts as
+# TimeoutError, and host/network/filesystem loss as ConnectionError/OSError.
+# Anything else (TypeError, ValueError, assertion failures, ...) is a bug in
+# the step function and must propagate instead of being retried as if a
+# machine had died.
+STEP_FAULT_TYPES = (RuntimeError, TimeoutError, ConnectionError, OSError)
+
 
 class HeartbeatRegistry:
     def __init__(self, hosts: Sequence[str], timeout_s: float = 30.0,
@@ -138,7 +146,7 @@ class TrainSupervisor:
                 continue
             try:
                 metrics = self.step_fn(step)
-            except Exception:
+            except STEP_FAULT_TYPES:
                 if restarts >= self.max_restarts:
                     raise
                 restarts += 1

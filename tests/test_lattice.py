@@ -15,13 +15,14 @@ import pytest
 
 from repro.core.conflicts import (assess_iact_conflicts,
                                   assess_iact_conflicts_grid)
-from repro.core.dataflow import (ConvWorkload, enumerate_dataflows,
-                                 enumerate_tilings, tile_extents,
-                                 tile_working_set)
+from repro.core.dataflow import (PING_PONG, ConvWorkload,
+                                 enumerate_dataflows, enumerate_tilings,
+                                 tile_extents, tile_working_set)
 from repro.core.layout import Layout, conv_layout_space
 from repro.core.layoutloop import (EvalConfig, cosearch_layer, evaluate,
-                                   evaluate_lattice, network_eval,
-                                   reorder_overhead)
+                                   evaluate_lattice, exposed_stall_cycles,
+                                   network_eval, reorder_overhead,
+                                   tile_dram_terms)
 from repro.core.nest import NestConfig
 from repro.plan import (NetworkPlanner, PlannerOptions, bert_graph,
                         mobilenet_v3_graph, resnet50_graph)
@@ -147,8 +148,15 @@ def test_untiled_lattice_point_is_default_tiling():
 
 
 # ----------------------------------------------------- enumerate_tilings
+def split_ping_pong(tiling):
+    """(plain (dim, size) pairs, double-buffered?) of one tiling entry."""
+    plain = tuple((d, v) for d, v in tiling if d != PING_PONG)
+    return plain, any(d == PING_PONG for d, _ in tiling)
+
+
 def test_enumerate_tilings_properties_seeded():
-    """Default first; every non-default tiling capacity-feasible, maximal
+    """Default first; every non-default tiling capacity-feasible against its
+    buffering regime's capacity (ping-pong candidates get half), maximal
     (bumping any dim overflows), and unique."""
     rng = np.random.default_rng(3)
     cfg = EvalConfig()
@@ -158,18 +166,33 @@ def test_enumerate_tilings_properties_seeded():
         tilings = list(enumerate_tilings(wl, None, cap, cfg.dtype_bytes))
         assert tilings[0] == ()
         assert len(set(tilings)) == len(tilings)
+        assert any(split_ping_pong(t)[1] for t in tilings), \
+            "no ping-pong candidates emitted"
         dims = wl.dims()
         for tiling in tilings[1:]:
+            plain, db = split_ping_pong(tiling)
+            budget = cap // 2 if db else cap
             ext = dict(dims)
-            ext.update(tiling)
-            assert tile_working_set(wl, ext) <= cap, (wl.name, tiling)
-            for d, v in tiling:
+            ext.update(plain)
+            assert tile_working_set(wl, ext) <= budget, (wl.name, tiling)
+            for d, v in plain:
                 assert 1 <= v < dims[d], (wl.name, tiling)
                 bumped = dict(ext)
                 bumped[d] = min(dims[d], 2 * v)
                 assert (bumped[d] == ext[d]
-                        or tile_working_set(wl, bumped) > cap), \
+                        or tile_working_set(wl, bumped) > budget), \
                     (wl.name, tiling, d)
+
+
+def test_enumerate_tilings_ping_pong_off_reproduces_pr4_space():
+    """``ping_pong=False`` must be exactly the PR 4 candidate space: no
+    tagged entries, same order."""
+    wl = ConvWorkload(M=256, C=128, P=14, Q=14, R=3, S=3, name="l")
+    cap = capacity_bytes(EvalConfig())
+    with_pp = list(enumerate_tilings(wl, None, cap))
+    without = list(enumerate_tilings(wl, None, cap, ping_pong=False))
+    assert all(not split_ping_pong(t)[1] for t in without)
+    assert without == [t for t in with_pp if not split_ping_pong(t)[1]]
 
 
 def test_tile_extents_clamps_to_spatial_factors():
@@ -195,6 +218,110 @@ def test_tiled_search_never_loses_to_untiled():
     for objective in ("cycles", "edp"):
         k = lat.key(objective)
         assert k.min() <= k[:, 0].min()
+
+
+# ------------------------------------------------- double-buffered pipeline
+def _fits_half_buffer(wl, df, cfg) -> bool:
+    cap_words = cfg.buffer.num_lines * cfg.buffer.line_size
+    return tile_working_set(wl, tile_extents(wl, df)) <= cap_words / 2
+
+
+def assert_double_buffer_never_worse(wl, cfg, rng) -> int:
+    """db cost <= sb cost for the SAME tiling whenever the halved buffer
+    still fits the (clamped) tile; returns the number of points checked."""
+    dfs = list(enumerate_dataflows(wl, cfg.nest.aw * cfg.nest.ah))
+    df = dfs[int(rng.integers(len(dfs)))]
+    checked = 0
+    for tiling in enumerate_tilings(wl, None, capacity_bytes(cfg),
+                                    cfg.dtype_bytes):
+        plain, _ = split_ping_pong(tiling)
+        df_sb = df.with_tiles(plain)
+        if not _fits_half_buffer(wl, df_sb, cfg):
+            continue
+        df_db = df.with_tiles(plain + ((PING_PONG, 1),))
+        assert df_db.double_buffer and not df_sb.double_buffer
+        for lay in SMALL_LAYOUTS[:2]:
+            for mode in ("none", "rir"):
+                m_sb = evaluate(wl, df_sb, lay, cfg, reorder=mode)
+                m_db = evaluate(wl, df_db, lay, cfg, reorder=mode)
+                assert m_db.dram_stall_cycles <= m_sb.dram_stall_cycles, \
+                    (wl.name, plain, lay.name(), mode)
+                assert m_db.cycles <= m_sb.cycles
+                assert m_db.edp <= m_sb.edp
+                # overlap changes only the exposed stall, never the work
+                assert m_db.compute_cycles == m_sb.compute_cycles
+                assert m_db.dram_bytes == m_sb.dram_bytes
+                checked += 1
+    return checked
+
+
+def test_double_buffered_cost_never_worse_seeded():
+    """The overlap property: for any tiling whose working set fits half the
+    buffer, the ping-pong variant never costs more than single-buffered."""
+    rng = np.random.default_rng(11)
+    cfg = EvalConfig(nest=NestConfig(aw=8, ah=8))
+    checked = 0
+    for _ in range(10):
+        checked += assert_double_buffer_never_worse(
+            random_workload(rng), cfg, rng)
+    assert checked > 20, "property vacuous: too few half-feasible tilings"
+
+
+def test_tile_dram_terms_pipeline_decomposition():
+    """The pipeline terms are a consistent decomposition of the totals, and
+    the exposure degrades to the serial charge exactly at zero compute."""
+    wl = ConvWorkload(M=256, C=128, P=14, Q=14, R=3, S=3, name="l")
+    cfg = EvalConfig()
+    df = next(iter(enumerate_dataflows(wl, 256)))
+    tiling = next(t for t in enumerate_tilings(wl, None, capacity_bytes(cfg))
+                  if split_ping_pong(t)[1])
+    plain, _ = split_ping_pong(tiling)
+    t_sb = tile_dram_terms(wl, df.with_tiles(plain), cfg)
+    t_db = tile_dram_terms(wl, df.with_tiles(tiling), cfg)
+    assert t_db.double_buffer and not t_sb.double_buffer
+    assert t_db.n_tiles == t_sb.n_tiles > 1
+    np.testing.assert_allclose(
+        t_db.tile_mem_cycles * t_db.n_tiles,
+        t_db.traffic_bytes / cfg.dram_bytes_per_cycle)
+    # single-buffered terms ignore compute entirely
+    assert exposed_stall_cycles(t_sb, 0.0) == t_sb.serial_stall_cycles
+    assert exposed_stall_cycles(t_sb, 1e18) == t_sb.serial_stall_cycles
+    # infinite compute hides every steady tile: only the prologue remains
+    assert exposed_stall_cycles(t_db, 1e18) == t_db.prologue_cycles
+    # zero compute degrades the pipeline to the serial refetch charge
+    np.testing.assert_allclose(exposed_stall_cycles(t_db, 0.0),
+                               t_db.serial_stall_cycles)
+    # monotone in compute: more overlap can only hide more
+    stalls = [exposed_stall_cycles(t_db, c)
+              for c in (0.0, 1e3, 1e5, 1e7, 1e18)]
+    assert stalls == sorted(stalls, reverse=True)
+
+
+def test_single_buffered_matches_pr4_golden_fixture():
+    """Acceptance: ``double_buffer=False`` reproduces the PR 4 cost model
+    bit-for-bit — every Metrics field of every fixture point, captured from
+    the pre-pipeline code, must come back identical (repr-exact)."""
+    import json
+    import pathlib
+
+    from repro.core.dataflow import Dataflow
+
+    path = pathlib.Path(__file__).parent / "goldens" / \
+        "tile_dram_pr4_fixture.json"
+    data = json.loads(path.read_text())
+    cfg = EvalConfig(nest=NestConfig(**data["nest"]))
+    assert len(data["entries"]) > 300
+    for e in data["entries"]:
+        wl = ConvWorkload(**e["workload"])
+        df = Dataflow(spatial=tuple((d, int(f)) for d, f in e["spatial"]))
+        df = df.with_tiles(tuple((d, int(v)) for d, v in e["tiles"]))
+        assert not df.double_buffer
+        m = evaluate(wl, df, Layout.parse(e["layout"]), cfg,
+                     reorder=e["mode"])
+        for field, want in e["metrics"].items():
+            assert repr(getattr(m, field)) == want, \
+                (e["workload"]["name"], e["spatial"], e["tiles"],
+                 e["layout"], e["mode"], field)
 
 
 # ----------------------------------------------- enumerate_dataflows dedup
@@ -224,6 +351,17 @@ if HAVE_HYPOTHESIS:
             max_tilings=3)
 
     @pytest.mark.slow
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(4, 256), st.integers(4, 256), st.integers(4, 32),
+           st.integers(4, 32), st.sampled_from([1, 3, 5]),
+           st.integers(0, 2**31 - 1))
+    def test_double_buffered_never_worse_hypothesis(m, c, p, q, r, seed):
+        wl = ConvWorkload(M=m, C=c, P=p, Q=q, R=r, S=r, name="hyp-db")
+        assert_double_buffer_never_worse(
+            wl, EvalConfig(nest=NestConfig(aw=8, ah=8)),
+            np.random.default_rng(seed))
+
+    @pytest.mark.slow
     @settings(max_examples=20, deadline=None)
     @given(st.integers(4, 512), st.integers(4, 512), st.integers(4, 64),
            st.integers(4, 64), st.sampled_from([1, 3, 5]))
@@ -234,9 +372,10 @@ if HAVE_HYPOTHESIS:
         tilings = list(enumerate_tilings(wl, None, cap, cfg.dtype_bytes))
         assert tilings[0] == ()
         for tiling in tilings[1:]:
+            plain, db = split_ping_pong(tiling)
             ext = dict(wl.dims())
-            ext.update(tiling)
-            assert tile_working_set(wl, ext) <= cap
+            ext.update(plain)
+            assert tile_working_set(wl, ext) <= (cap // 2 if db else cap)
 
 
 # ------------------------------------------------------------ error handling
@@ -350,6 +489,24 @@ def test_tiled_plan_objective_never_worse_than_untiled():
                 PlannerOptions(**base, search_tiles=False)).plan()
             assert tiled.total_cycles <= untiled.total_cycles, \
                 (graph.name, modes)
+
+
+def test_double_buffered_plan_never_worse_than_single_buffered():
+    """Acceptance: the ping-pong candidates only ever ADD lattice points, so
+    the double-buffered DP dominates the PR 4 single-buffered DP on every
+    graph/hardware combination."""
+    cfg = EvalConfig()
+    for graph_fn in (mobilenet_v3_graph, lambda: bert_graph(layers_sampled=1)):
+        graph = graph_fn()
+        for modes in (("rir", "offchip"), ("offchip",)):
+            base = dict(switch_modes=modes, layouts=SMALL_LAYOUTS,
+                        parallel_dims=("C", "P", "Q"))
+            db = NetworkPlanner(graph, cfg, PlannerOptions(**base)).plan()
+            sb = NetworkPlanner(
+                graph, cfg,
+                PlannerOptions(**base, double_buffer=False)).plan()
+            assert db.total_cycles <= sb.total_cycles, (graph.name, modes)
+            assert all(not s.double_buffer for s in sb.steps)
 
 
 # --------------------------------------------------------------- CI speed guard

@@ -116,6 +116,55 @@ def test_plan_cache_memoizes_and_persists(tmp_path):
     assert len(calls) == 1 and c == a
 
 
+def test_plan_cache_corrupt_artifact_is_a_miss(tmp_path):
+    """A corrupt on-disk artifact must not raise out of ``get``: it is
+    deleted, treated as a miss, and ``get_or_plan`` re-plans over it."""
+    graph = small_chain(2)
+    cfg = EvalConfig()
+    opts = PlannerOptions(switch_modes=("rir",), layouts=SMALL_LAYOUTS,
+                          parallel_dims=("C", "P", "Q"))
+    calls = []
+
+    def planner_fn(g, c):
+        calls.append(1)
+        return NetworkPlanner(g, c, opts).plan()
+
+    plan = PlanCache(tmp_path).get_or_plan(graph, cfg, planner_fn,
+                                           extra_key=opts.key())
+    (artifact,) = tmp_path.glob("plan-*.json")
+    for garbage in ("{not json", '{"version": 3}'):
+        artifact.write_text(garbage)
+        cache = PlanCache(tmp_path)   # fresh: no in-memory hit
+        assert cache.get(plan.graph_hash, plan.config_key) is None
+        assert not artifact.exists(), "corrupt cache file not evicted"
+        replanned = cache.get_or_plan(graph, cfg, planner_fn,
+                                      extra_key=opts.key())
+        assert replanned == plan
+
+
+def test_plan_cache_validates_full_key_after_load(tmp_path):
+    """The filename only encodes 16-char truncated hashes; a filename
+    collision (or hand-edited artifact) whose recorded full identity
+    mismatches must be a miss, never the wrong plan."""
+    graph = small_chain(2)
+    cfg = EvalConfig()
+    opts = PlannerOptions(switch_modes=("rir",), layouts=SMALL_LAYOUTS,
+                          parallel_dims=("C", "P", "Q"))
+    cache = PlanCache(tmp_path)
+    plan = cache.get_or_plan(
+        graph, cfg, lambda g, c: NetworkPlanner(g, c, opts).plan(),
+        extra_key=opts.key())
+    (artifact,) = tmp_path.glob("plan-*.json")
+    # another (graph, config)'s plan lands on this filename: simulate the
+    # truncated-hash collision by swapping in a mismatching artifact
+    import dataclasses
+    impostor = dataclasses.replace(plan, graph_hash="f" * 64)
+    artifact.write_text(impostor.to_json())
+    fresh = PlanCache(tmp_path)
+    assert fresh.get(plan.graph_hash, plan.config_key) is None
+    assert not artifact.exists(), "mismatched cache file not evicted"
+
+
 def test_graph_hash_tracks_content():
     assert small_chain(3).graph_hash() == small_chain(3).graph_hash()
     assert small_chain(3).graph_hash() != small_chain(4).graph_hash()

@@ -1,9 +1,10 @@
-"""Tile axis through the artifact + execution layers.
+"""Tile + double-buffer axes through the artifact + execution layers.
 
-Covers the plan schema v2 (tile-carrying steps, v1 back-compat via the
-checked-in fixture), the tile-derived kernel block/grid shapes, and the
-batch-norm/bias fold through the executor's effective-weight hook point —
-all validated against the ``kernels/ref.py``-based oracles.
+Covers the plan schema v3 (tile- and ping-pong-carrying steps, v1/v2
+back-compat via the checked-in fixtures), the tile-derived kernel
+block/grid shapes (halved resident extents for double-buffered steps), and
+the batch-norm/bias fold through the executor's effective-weight hook
+point — all validated against the ``kernels/ref.py``-based oracles.
 """
 import dataclasses
 import pathlib
@@ -26,6 +27,7 @@ from repro.plan.executor import MIN_KERNEL_BLOCK
 from repro.plan.plan import PLAN_VERSION, RIR_BLOCK
 
 FIXTURE_V1 = pathlib.Path(__file__).parent / "goldens" / "plan_v1_fixture.json"
+FIXTURE_V2 = pathlib.Path(__file__).parent / "goldens" / "plan_v2_fixture.json"
 SMALL_LAYOUTS = tuple(Layout.parse(s)
                       for s in ("HWC_C32", "HWC_H32", "HWC_C4W8"))
 OPTS = dict(layouts=SMALL_LAYOUTS, parallel_dims=("C", "P", "Q"))
@@ -40,29 +42,49 @@ def tiled_plan(graph, **kw):
 # ----------------------------------------------------------- schema v2 compat
 def test_v1_fixture_loads_and_roundtrips():
     """A checked-in pre-tile (version 1) artifact must load — steps get the
-    default whole-tensor tiling — and round-trip losslessly."""
+    default whole-tensor tiling, single-buffered — and round-trip
+    losslessly."""
     text = FIXTURE_V1.read_text()
     plan = ExecutionPlan.from_json(text)
     assert plan.version == 1
     assert all(s.tiles == () for s in plan.steps)
     assert all(s.dataflow.tiles == () for s in plan.steps)
+    assert all(not s.double_buffer for s in plan.steps)
     again = ExecutionPlan.from_json(plan.to_json())
     assert again == plan
 
 
-def test_v2_plan_carries_tiles_through_json():
+def test_v2_fixture_loads_single_buffered():
+    """A checked-in pre-pipeline (version 2) artifact must load with every
+    step single-buffered — the PR 4 execution semantics — and round-trip
+    losslessly."""
+    plan = ExecutionPlan.from_json(FIXTURE_V2.read_text())
+    assert plan.version == 2
+    assert any(s.tiles for s in plan.steps)   # v2 artifacts DO carry tiles
+    assert all(not s.double_buffer for s in plan.steps)
+    assert all(not s.dataflow.double_buffer for s in plan.steps)
+    again = ExecutionPlan.from_json(plan.to_json())
+    assert again == plan
+
+
+def test_v3_plan_carries_tiles_and_double_buffer_through_json():
     graph = from_layers([
         ConvWorkload(M=256, C=128, P=14, Q=14, R=3, S=3, name="big"),
         ConvWorkload(M=128, C=256, P=14, Q=14, R=1, S=1, name="pw"),
     ], "two")
     plan = tiled_plan(graph)
-    assert plan.version == PLAN_VERSION == 2
+    assert plan.version == PLAN_VERSION == 3
     assert any(s.tiles for s in plan.steps), "no layer chose a tiling"
+    assert any(s.double_buffer for s in plan.steps), \
+        "no layer chose the ping-pong tiling"
     for s in plan.steps:
         assert s.tiles == s.dataflow.tiles
+        assert s.double_buffer == s.dataflow.double_buffer
     loaded = ExecutionPlan.from_json(plan.to_json())
     assert loaded == plan
     assert [s.tiles for s in loaded.steps] == [s.tiles for s in plan.steps]
+    assert [s.double_buffer for s in loaded.steps] == \
+        [s.double_buffer for s in plan.steps]
 
 
 def test_unknown_plan_version_rejected():
@@ -80,21 +102,32 @@ def test_step_kernel_blocks_follow_the_tile():
     bm, bk = step_kernel_blocks(step)
     assert MIN_KERNEL_BLOCK <= bm <= RIR_BLOCK
     assert MIN_KERNEL_BLOCK <= bk <= RIR_BLOCK
-    # tile-less steps keep the full hardcoded block (v1 behaviour)
-    untiled = dataclasses.replace(step, tiles=())
+    # tile-less single-buffered steps keep the full hardcoded block (v1)
+    untiled = dataclasses.replace(step, tiles=(), double_buffer=False)
     assert step_kernel_blocks(untiled) == (RIR_BLOCK, RIR_BLOCK)
     # a small tile shrinks the grid blocks (floored at MIN_KERNEL_BLOCK)
     tiny = dataclasses.replace(
-        step, tiles=(("M", 16), ("C", 8), ("P", 2), ("Q", 2)))
+        step, tiles=(("M", 16), ("C", 8), ("P", 2), ("Q", 2)),
+        double_buffer=False)
     assert step_kernel_blocks(tiny) == (MIN_KERNEL_BLOCK, MIN_KERNEL_BLOCK)
-    wide = dataclasses.replace(step, tiles=(("C", 64),))
+    wide = dataclasses.replace(step, tiles=(("C", 64),), double_buffer=False)
     assert step_kernel_blocks(wide) == (RIR_BLOCK, RIR_BLOCK)
+    # ping-pong halves the resident extents before the pow-2 floor: a tile
+    # that pins the full block single-buffered drops one power of two
+    assert step_kernel_blocks(dataclasses.replace(
+        wide, double_buffer=True)) == (MIN_KERNEL_BLOCK, RIR_BLOCK)
+    pinned = dataclasses.replace(
+        step, tiles=(("C", 32), ("P", 14), ("Q", 14)), double_buffer=False)
+    halved = dataclasses.replace(pinned, double_buffer=True)
+    bm_sb, bk_sb = step_kernel_blocks(pinned)
+    bm_db, bk_db = step_kernel_blocks(halved)
+    assert bm_db <= bm_sb and bk_db <= bk_sb
 
 
 def test_tiled_plan_executes_bit_identical_to_untiled():
-    """The tile choice changes the kernel block/grid shape, never the math:
-    a tiled and an untiled plan over the same boundary layouts must produce
-    identical outputs."""
+    """The tile + double-buffer choice changes the kernel block/grid shape,
+    never the math: a (possibly ping-pong) tiled and an untiled plan over
+    the same boundary layouts must produce identical outputs."""
     graph = from_layers([
         ConvWorkload(M=256, C=128, P=16, Q=16, R=3, S=3, name="conv"),
         ConvWorkload(M=128, C=256, P=16, Q=16, R=1, S=1, name="pw"),
@@ -104,7 +137,8 @@ def test_tiled_plan_executes_bit_identical_to_untiled():
     plan_u = dataclasses.replace(
         plan_t, steps=tuple(
             dataclasses.replace(
-                s, tiles=(), dataflow=s.dataflow.with_tiles(()))
+                s, tiles=(), double_buffer=False,
+                dataflow=s.dataflow.with_tiles(()))
             for s in plan_t.steps))
     ws = init_graph_weights(list(graph.layers), seed=11)
     rng = np.random.default_rng(12)

@@ -1,17 +1,26 @@
 """Shared helpers for the benchmark suite."""
 from __future__ import annotations
 
-import time
 from typing import Callable, List
+
+from repro.obs import measure
 
 
 def timeit(fn: Callable, warmup: int = 1, iters: int = 5) -> float:
+    """Mean wall time of ``fn()`` in microseconds.
+
+    Timing goes through ``repro.obs.measure``, which calls
+    ``jax.block_until_ready`` on the result *inside* the timed region —
+    otherwise JAX's async dispatch returns before the computation runs and
+    the benchmark times the enqueue, not the work.  Call sites pass the raw
+    function; no manual ``block_until_ready`` wrapper needed.
+    """
     for _ in range(warmup):
-        fn()
-    t0 = time.perf_counter()
+        measure(fn)
+    total = 0.0
     for _ in range(iters):
-        fn()
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+        total += measure(fn)[1]
+    return total / iters * 1e6  # us
 
 
 def emit(rows: List[tuple]) -> None:

@@ -22,7 +22,7 @@ def run():
     b = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
     perm = tuple(int(x) for x in rng.permutation(N // 128))
     f = jax.jit(lambda a, b: ref.rir_matmul(a, b, perm, 128))
-    us = timeit(lambda: jax.block_until_ready(f(a, b)))
+    us = timeit(lambda: f(a, b))
     flops = 2 * M * K * N
     rows.append(("kern.rir_matmul_512", us,
                  f"gflops={flops/us/1e3:.1f}"))
@@ -34,7 +34,7 @@ def run():
     v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
     lens = jnp.full((B,), S, jnp.int32)
     f = jax.jit(ref.gqa_decode)
-    us = timeit(lambda: jax.block_until_ready(f(q, k, v, lens)))
+    us = timeit(lambda: f(q, k, v, lens))
     bytes_moved = 2 * B * S * Hkv * D * 4
     rows.append(("kern.gqa_decode_8k", us,
                  f"gbps={bytes_moved/us/1e3:.1f}"))
@@ -46,7 +46,7 @@ def run():
     v2 = jnp.asarray(rng.normal(size=(B, H, T, dv)), jnp.float32)
     w = jnp.asarray(-np.abs(rng.normal(size=(B, H, T, dk)) * 0.1), jnp.float32)
     f = jax.jit(ref.linear_scan_chunked)
-    us = timeit(lambda: jax.block_until_ready(f(q, k2, v2, w)))
+    us = timeit(lambda: f(q, k2, v2, w))
     rows.append(("kern.linear_scan_2k", us,
                  f"tokens_per_s={B*T/(us/1e6):.0f}"))
 
@@ -55,8 +55,7 @@ def run():
     x = jnp.asarray(rng.normal(size=(16, 4096)), jnp.float32)
     gids = [i // 4 for i in range(16)]
     ports = [0, 4, 8, 12]
-    us = timeit(lambda: jax.block_until_ready(
-        ops.birrd_reduce(x, gids, ports)))
+    us = timeit(lambda: ops.birrd_reduce(x, gids, ports))
     rows.append(("kern.birrd_reduce_16x4096", us, "staged-butterfly"))
     return rows
 

@@ -19,6 +19,7 @@ from repro.core.dataflow import enumerate_dataflows, enumerate_tilings
 from repro.core.layout import conv_layout_space
 from repro.core.layoutloop import EvalConfig, evaluate, evaluate_lattice
 from repro.core.workloads import mobilenet_v3_layers, resnet50_layers
+from repro.obs import measure
 from repro.plan import NetworkPlanner, PlannerOptions, mobilenet_v3_graph, \
     resnet50_graph
 
@@ -48,13 +49,10 @@ def bench_layer_sweep(cfg: EvalConfig) -> dict:
     dfs = list(enumerate_dataflows(wl, cfg.nest.aw * cfg.nest.ah,
                                    parallel_dims=("C", "P", "Q")))
     layouts = conv_layout_space()
-    t0 = time.perf_counter()
-    scalar = [evaluate(wl, df, lay, cfg, reorder=mode)
-              for lay in layouts for df in dfs for mode in MODES]
-    t_scalar = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    lat = evaluate_lattice(wl, dfs, layouts, MODES, cfg)
-    t_lattice = time.perf_counter() - t0
+    scalar, t_scalar = measure(
+        lambda: [evaluate(wl, df, lay, cfg, reorder=mode)
+                 for lay in layouts for df in dfs for mode in MODES])
+    lat, t_lattice = measure(evaluate_lattice, wl, dfs, layouts, MODES, cfg)
     assert lat.shape == (len(dfs), 1, len(layouts), len(MODES))
     return {"layer": wl.name, "points": len(scalar),
             "scalar_s": t_scalar, "lattice_s": t_lattice,
@@ -69,9 +67,8 @@ def bench_tiled_sweep(cfg: EvalConfig) -> dict:
     cap = cfg.buffer.num_lines * cfg.buffer.line_size * cfg.dtype_bytes
     tilings = list(enumerate_tilings(wl, None, cap, cfg.dtype_bytes))
     layouts = conv_layout_space()
-    t0 = time.perf_counter()
-    lat = evaluate_lattice(wl, dfs, layouts, MODES, cfg, tilings=tilings)
-    t_lattice = time.perf_counter() - t0
+    lat, t_lattice = measure(evaluate_lattice, wl, dfs, layouts, MODES, cfg,
+                             tilings=tilings)
     points = len(dfs) * len(tilings) * len(layouts) * len(MODES)
     assert lat.shape == (len(dfs), len(tilings), len(layouts), len(MODES))
     edp = lat.key("edp")
@@ -82,12 +79,11 @@ def bench_tiled_sweep(cfg: EvalConfig) -> dict:
 
 def bench_plan(graph, cfg: EvalConfig) -> dict:
     """End-to-end network planning, table-driven vs scalar path."""
-    t0 = time.perf_counter()
-    fast = NetworkPlanner(graph, cfg, PLANNER_OPTS).plan()
-    t_lattice = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    slow = NetworkPlanner(graph, cfg, PLANNER_OPTS, use_lattice=False).plan()
-    t_scalar = time.perf_counter() - t0
+    fast, t_lattice = measure(
+        lambda: NetworkPlanner(graph, cfg, PLANNER_OPTS).plan())
+    slow, t_scalar = measure(
+        lambda: NetworkPlanner(graph, cfg, PLANNER_OPTS,
+                               use_lattice=False).plan())
     assert fast.to_json() == slow.to_json(), \
         f"lattice/scalar plan mismatch on {graph.name}"
     return {"layers": len(graph), "scalar_s": t_scalar,
@@ -97,9 +93,8 @@ def bench_plan(graph, cfg: EvalConfig) -> dict:
 
 def bench_tiled_plan(graph, cfg: EvalConfig) -> dict:
     """End-to-end joint (dataflow x tile x layout) planning vs untiled."""
-    t0 = time.perf_counter()
-    tiled = NetworkPlanner(graph, cfg, TILED_OPTS).plan()
-    t_tiled = time.perf_counter() - t0
+    tiled, t_tiled = measure(
+        lambda: NetworkPlanner(graph, cfg, TILED_OPTS).plan())
     untiled = NetworkPlanner(graph, cfg, PLANNER_OPTS).plan()
     assert tiled.total_cycles <= untiled.total_cycles, graph.name
     return {"layers": len(graph), "tiled_s": t_tiled,
@@ -112,9 +107,8 @@ def bench_tiled_plan(graph, cfg: EvalConfig) -> dict:
 def bench_pipelined_plan(graph, cfg: EvalConfig) -> dict:
     """Double-buffered (ping-pong) planning vs the PR 4 single-buffered DP:
     the cycle/stall win from overlapping tile refetch with compute."""
-    t0 = time.perf_counter()
-    pipe = NetworkPlanner(graph, cfg, PIPELINED_OPTS).plan()
-    t_pipe = time.perf_counter() - t0
+    pipe, t_pipe = measure(
+        lambda: NetworkPlanner(graph, cfg, PIPELINED_OPTS).plan())
     tiled = NetworkPlanner(graph, cfg, TILED_OPTS).plan()
     assert pipe.total_cycles <= tiled.total_cycles, graph.name
     return {"layers": len(graph), "pipelined_s": t_pipe,

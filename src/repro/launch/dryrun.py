@@ -24,6 +24,10 @@ import subprocess
 import sys
 import time
 
+from repro import obs
+
+log = obs.get_logger("dryrun")
+
 
 def _collective_bytes(hlo: str):
     from repro.core.tpu_cost import collective_bytes_from_hlo
@@ -161,7 +165,14 @@ def main() -> None:
                     help="run every assigned cell (both meshes) as subprocesses")
     ap.add_argument("--jobs", type=int, default=4)
     ap.add_argument("--results-dir", default="results/dryrun")
+    ap.add_argument("--log-level", default=None,
+                    choices=["debug", "info", "warning", "error"],
+                    help="console log threshold (default: REPRO_LOG or info)")
     args = ap.parse_args()
+
+    obs.configure_from_env()          # REPRO_TRACE=path enables tracing
+    if args.log_level:
+        obs.set_level(args.log_level)
 
     if args.all:
         rdir = pathlib.Path(args.results_dir)
@@ -183,15 +194,17 @@ def main() -> None:
         while jobs or running:
             while jobs and len(running) < args.jobs:
                 tag, cmd = jobs.pop(0)
-                print(f"[dryrun] start {tag}", flush=True)
+                log.info("start %s", tag)
                 running.append((tag, subprocess.Popen(
                     cmd, stdout=subprocess.DEVNULL,
                     stderr=subprocess.PIPE)))
             done = [r for r in running if r[1].poll() is not None]
             for tag, proc in done:
                 running.remove((tag, proc))
-                status = "ok" if proc.returncode == 0 else "FAIL"
-                print(f"[dryrun] {status} {tag}", flush=True)
+                if proc.returncode == 0:
+                    log.info("ok %s", tag)
+                else:
+                    log.error("FAIL %s", tag)
                 if proc.returncode != 0:
                     err = proc.stderr.read().decode()[-2000:]
                     (pathlib.Path(args.results_dir) / f"{tag}.err").write_text(err)

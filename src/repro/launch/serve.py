@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3p2_3b --smoke \
         --batch 4 --prompt-len 32 --gen 16 --plan plan.json
+
+Observability: console output goes through the ``repro.obs`` structured
+logger (``--log-level`` / ``REPRO_LOG``); ``REPRO_TRACE=out.jsonl`` records
+plan/prefill/decode spans and per-request latency histograms
+(``serve.prefill_ms``, ``serve.decode_ms_per_token``) for
+``python -m repro.obs.report``.
 """
 from __future__ import annotations
 
@@ -12,6 +18,10 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
+
+log = obs.get_logger("serve")
 
 
 def _plan_for(cfg, args):
@@ -36,7 +46,7 @@ def _plan_for(cfg, args):
         try:
             cache.put(ExecutionPlan.load(path))
         except Exception as e:  # unreadable/corrupt/foreign-version artifact
-            print(f"[serve] plan {path} is unreadable ({e}); re-planning")
+            log.warning("plan %s is unreadable (%s); re-planning", path, e)
 
     replanned = []
 
@@ -48,8 +58,8 @@ def _plan_for(cfg, args):
                              extra_key=opts.key())
     if replanned:
         plan.save(path)
-        print(f"[serve] planned {len(plan)} layers -> {path}")
-    print(plan.summary())
+        log.info("planned %d layers -> %s", len(plan), path)
+    log.info("%s", plan.summary())
     return plan
 
 
@@ -64,7 +74,14 @@ def main() -> None:
     ap.add_argument("--plan", default=None, metavar="PATH",
                     help="execution-plan artifact: load it if it exists, "
                     "else network-plan this arch and save it there")
+    ap.add_argument("--log-level", default=None,
+                    choices=["debug", "info", "warning", "error"],
+                    help="console log threshold (default: REPRO_LOG or info)")
     args = ap.parse_args()
+
+    obs.configure_from_env()          # REPRO_TRACE=path enables tracing
+    if args.log_level:
+        obs.set_level(args.log_level)
 
     from repro.configs import get_config
     from repro.launch.mesh import make_local_mesh
@@ -72,7 +89,8 @@ def main() -> None:
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.plan:
-        _plan_for(cfg, args)
+        with obs.span("serve.plan", {"arch": cfg.name}):
+            _plan_for(cfg, args)
     model = build_model(cfg)
     mesh = make_local_mesh(args.model_axis)
     # independent streams: reusing one key for params AND data would
@@ -85,31 +103,49 @@ def main() -> None:
     prompts = jax.random.randint(data_key, (B, args.prompt_len), 0, cfg.vocab)
 
     decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    traced = obs.enabled()
     with mesh:
-        t0 = time.time()
-        if cfg.family in ("ssm", "hybrid"):
-            cache = model.init_cache(B, max_seq)
-            logits = None
-            for t in range(args.prompt_len):  # SSM prefill = fast scan-in
-                cache, logits = decode(params, cache, prompts[:, t])
-        else:
-            cache, logits = model.prefill(params, prompts, max_seq)
-        t_prefill = time.time() - t0
+        with obs.span("serve.prefill", {"arch": cfg.name, "batch": B,
+                                        "prompt_len": args.prompt_len}
+                      if traced else None):
+            t0 = time.perf_counter()
+            if cfg.family in ("ssm", "hybrid"):
+                cache = model.init_cache(B, max_seq)
+                logits = None
+                for t in range(args.prompt_len):  # SSM prefill = scan-in
+                    cache, logits = decode(params, cache, prompts[:, t])
+            else:
+                cache, logits = model.prefill(params, prompts, max_seq)
+            # async dispatch: without the fence this measures Python time
+            logits = jax.block_until_ready(logits)
+            t_prefill = time.perf_counter() - t0
+        obs.observe("serve.prefill_ms", t_prefill * 1e3)
         tokens = jnp.argmax(logits, axis=-1)
         out = [tokens]
-        t0 = time.time()
-        for _ in range(args.gen - 1):
-            cache, logits = decode(params, cache, tokens)
-            tokens = jnp.argmax(logits, axis=-1)
-            out.append(tokens)
-        jax.block_until_ready(tokens)
-        t_decode = time.time() - t0
+        t0 = time.perf_counter()
+        with obs.span("serve.decode", {"arch": cfg.name, "batch": B,
+                                       "gen": args.gen}
+                      if traced else None):
+            for _ in range(args.gen - 1):
+                if traced:
+                    tok_t0 = obs.now_us()
+                cache, logits = decode(params, cache, tokens)
+                tokens = jnp.argmax(logits, axis=-1)
+                out.append(tokens)
+                if traced:
+                    # per-token histogram sample: sync each step (observer
+                    # cost; untraced serving keeps the pipelined dispatch)
+                    tokens = jax.block_until_ready(tokens)
+                    obs.observe("serve.decode_ms_per_token",
+                                (obs.now_us() - tok_t0) / 1e3)
+            jax.block_until_ready(tokens)
+        t_decode = time.perf_counter() - t0
     gen = np.stack([np.asarray(t) for t in out], axis=1)
-    print(f"[serve] arch={cfg.name} batch={B} prompt={args.prompt_len} "
-          f"gen={args.gen}")
-    print(f"[serve] prefill {t_prefill*1e3:.1f} ms; decode "
-          f"{t_decode*1e3/max(1, args.gen-1):.1f} ms/token")
-    print("[serve] sample tokens:", gen[0, :12].tolist())
+    log.info("arch=%s batch=%d prompt=%d gen=%d",
+             cfg.name, B, args.prompt_len, args.gen)
+    log.info("prefill %.1f ms; decode %.1f ms/token",
+             t_prefill * 1e3, t_decode * 1e3 / max(1, args.gen - 1))
+    log.info("sample tokens: %s", gen[0, :12].tolist())
 
 
 if __name__ == "__main__":

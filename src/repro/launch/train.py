@@ -5,6 +5,10 @@ data pipeline, async checkpointing with resume, straggler monitor hooks.
 
     PYTHONPATH=src python -m repro.launch.train --arch llama3p2_3b --smoke \
         --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Console output goes through the ``repro.obs`` structured logger
+(``--log-level`` / ``REPRO_LOG``); ``REPRO_TRACE=out.jsonl`` records
+per-step spans and a ``train.step_ms`` histogram.
 """
 from __future__ import annotations
 
@@ -14,6 +18,10 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
+
+log = obs.get_logger("train")
 
 
 def main() -> None:
@@ -31,7 +39,14 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--log-level", default=None,
+                    choices=["debug", "info", "warning", "error"],
+                    help="console log threshold (default: REPRO_LOG or info)")
     args = ap.parse_args()
+
+    obs.configure_from_env()          # REPRO_TRACE=path enables tracing
+    if args.log_level:
+        obs.set_level(args.log_level)
 
     from repro.checkpoint import CheckpointManager
     from repro.configs import get_config
@@ -70,26 +85,33 @@ def main() -> None:
                                           "opt": opt_state})
         if s is not None:
             start, params, opt_state = s, restored["params"], restored["opt"]
-            print(f"[train] resumed from step {start}")
+            log.info("resumed from step %d", start)
 
     t0 = time.time()
+    traced = obs.enabled()
     with mesh:
         for step in range(start, args.steps):
+            if traced:
+                step_t0 = obs.now_us()
             batch = {k: jnp.asarray(v) for k, v in
                      stream.batch_at(step).items()}
             params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if traced:
+                metrics = jax.block_until_ready(metrics)
+                obs.record_span("train.step", step_t0, {"step": step})
+                obs.observe("train.step_ms",
+                            (obs.now_us() - step_t0) / 1e3)
             if step % args.log_every == 0 or step == args.steps - 1:
                 loss = float(metrics["loss"])
-                print(f"[train] step={step} loss={loss:.4f} "
-                      f"lr={float(metrics['lr']):.2e} "
-                      f"({time.time()-t0:.1f}s)", flush=True)
+                log.info("step=%d loss=%.4f lr=%.2e (%.1fs)",
+                         step, loss, float(metrics["lr"]), time.time() - t0)
             if mgr and (step + 1) % args.ckpt_every == 0:
                 mgr.save(step + 1, {"params": params, "opt": opt_state})
     if mgr:
         mgr.save(args.steps, {"params": params, "opt": opt_state})
         mgr.wait()
         mgr.close()
-    print("[train] done")
+    log.info("done")
 
 
 if __name__ == "__main__":

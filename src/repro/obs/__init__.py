@@ -1,0 +1,63 @@
+"""repro.obs — zero-dependency tracing, metrics, and structured logging.
+
+FEATHER's pitch is that per-layer dataflow/layout switching is worth it only
+if the switching overheads are actually negligible; this package is how the
+repro *measures* that instead of asserting it.  It threads through every
+layer of the stack:
+
+* ``NetworkPlanner`` — per-phase spans (lattice build, DP extend, argmin)
+  and candidate-count gauges,
+* ``PlanCache`` — hit / miss / eviction counters,
+* the plan executors — per-step wall-clock spans bracketed by
+  ``jax.block_until_ready``, recorded next to the step's modeled
+  cycles/energy from the plan artifact,
+* ``launch.serve`` — per-request prefill/decode latency histograms,
+* ``TrainSupervisor`` — fault/retry counters by fault type.
+
+The disabled path is a hard no-op: one module-level flag, no event dicts, no
+string formatting, no timestamps (see ``trace.NULL_SPAN``), so production
+code keeps its instrumentation with tracing off at zero measurable cost.
+
+Capturing a trace
+-----------------
+Set ``REPRO_TRACE`` to a path and run any launcher (they all call
+``configure_from_env``)::
+
+    REPRO_TRACE=out.jsonl PYTHONPATH=src \\
+        python -m repro.launch.serve --arch llama3p2_3b --smoke --plan p.json
+
+or programmatically::
+
+    from repro import obs
+    obs.enable("out.jsonl")
+    ...   # plan / execute / serve
+    obs.flush()
+
+Reading the trace
+-----------------
+``python -m repro.obs.report out.jsonl`` prints the per-plan-step
+modeled-cycles vs measured-wall-clock table (gap ratios, worst offenders)
+plus planner/cache/serve summaries — the calibration artifact the
+measured-vs-modeled roadmap item asks for.  ``--chrome out.json`` converts
+the same events to Chrome ``trace_event`` format: open it in
+``chrome://tracing`` or https://ui.perfetto.dev to see the span timeline.
+``python -m repro.obs.smoke`` runs a small planned network with tracing on
+and validates the trace schema end-to-end (the CI smoke).
+"""
+from .log import Logger, get_logger, set_level
+from .metrics import (counter_value, gauge_value, hist_samples, hist_stats,
+                      inc_counter, observe, registry, set_gauge, snapshot)
+from .trace import (NULL_SPAN, TRACE_SCHEMA, Span, configure_from_env,
+                    disable, enable, enabled, events, export_chrome_trace,
+                    flush, measure, now_us, read_trace, record_event,
+                    record_span, reset, span, validate_trace)
+
+__all__ = [
+    "Logger", "get_logger", "set_level",
+    "inc_counter", "set_gauge", "observe", "counter_value", "gauge_value",
+    "hist_samples", "hist_stats", "snapshot", "registry",
+    "NULL_SPAN", "TRACE_SCHEMA", "Span", "span", "record_span",
+    "record_event", "now_us", "enable", "disable", "enabled", "reset",
+    "events", "flush", "read_trace", "validate_trace",
+    "export_chrome_trace", "configure_from_env", "measure",
+]

@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.workloads import input_channels, is_depthwise, weight_shape
 from repro.kernels import ops, ref
 
@@ -62,6 +63,28 @@ from .plan import RIR_BLOCK, ExecutionPlan, PlanStep, layout_block_perm
 # the smallest kernel block the tile-derived grid may shrink to: below this
 # the grid bookkeeping dwarfs the MXU work (and interpret-mode test time)
 MIN_KERNEL_BLOCK = 64
+
+
+def _plan_provenance(plan: ExecutionPlan) -> Dict[str, object]:
+    """Span attributes joining a measured interval back to its plan artifact."""
+    return {"plan_id": plan.plan_id, "graph_hash": plan.graph_hash,
+            "schema_version": plan.version, "graph": plan.graph_name}
+
+
+def _step_attrs(prov: Dict[str, object], i: int, step: PlanStep
+                ) -> Dict[str, object]:
+    """Per-step span attributes: provenance + the step's MODELED numbers.
+
+    Recording the analytical ``cycles``/``energy_pj`` next to the measured
+    wall-clock (the span's ``dur``) is what makes the trace a calibration
+    artifact: ``repro.obs.report`` computes the model-vs-measured gap per
+    step straight from these events.
+    """
+    d = dict(prov)
+    d.update(step=i, layer=step.layer, lowering=step.lowering,
+             reorder=step.reorder, double_buffer=step.double_buffer,
+             modeled_cycles=step.cycles, modeled_energy_pj=step.energy_pj)
+    return d
 
 
 class PlanError(ValueError):
@@ -244,31 +267,55 @@ class PreparedPlan:
             permute_weight_blocks(w, self.perms[i], block)
             if len(self.perms[i]) > 1 else w
             for i, w in enumerate(weights)]
+        self._prov: Optional[Dict[str, object]] = None
+
+    def _provenance(self) -> Dict[str, object]:
+        if self._prov is None:
+            self._prov = _plan_provenance(self.plan)
+        return self._prov
 
     def __call__(self, x: jax.Array, *,
                  activation: Optional[Callable[[jax.Array], jax.Array]] = None,
                  use_pallas: bool = True) -> jax.Array:
         plan, block, perms = self.plan, self.block, self.perms
-        cur = apply_block_perm(x, perms[0], block) if len(perms[0]) > 1 else x
-        for i, (step, w_eff) in enumerate(zip(plan.steps, self.w_eff)):
-            out_perm = perms[i + 1]
-            bm, bk = self.blocks[i]
-            tiled = (cur.shape[0] % bm == 0 and w_eff.shape[0] % bk == 0
-                     and w_eff.shape[1] % block == 0)
-            if use_pallas and tiled and step.kernel == "rir_matmul":
-                cur = ops.rir_matmul(cur, w_eff, out_perm
-                                     if len(out_perm) > 1 else None,
-                                     block_m=bm, block_n=block,
-                                     block_k=bk)
-            else:
-                y = jnp.dot(cur, w_eff, preferred_element_type=jnp.float32)
-                y = y.astype(cur.dtype)
-                cur = apply_block_perm(y, out_perm, block) \
-                    if len(out_perm) > 1 else y
-            if activation is not None and i < len(plan.steps) - 1:
-                cur = activation(cur)   # elementwise: commutes with block perms
-        return invert_block_perm(cur, perms[-1], block) \
-            if len(perms[-1]) > 1 else cur
+        # per-step wall-clock needs a sync point per layer, so the traced
+        # path brackets each step with ``jax.block_until_ready`` (values are
+        # untouched — outputs stay bit-identical with tracing on or off);
+        # with tracing off no timestamp is read and no sync is forced
+        traced = obs.enabled()
+        with obs.span("exec.chain",
+                      dict(self._provenance(), pallas=bool(use_pallas),
+                           rows=int(x.shape[0])) if traced else None):
+            cur = apply_block_perm(x, perms[0], block) \
+                if len(perms[0]) > 1 else x
+            for i, (step, w_eff) in enumerate(zip(plan.steps, self.w_eff)):
+                if traced:
+                    t0 = obs.now_us()
+                out_perm = perms[i + 1]
+                bm, bk = self.blocks[i]
+                tiled = (cur.shape[0] % bm == 0 and w_eff.shape[0] % bk == 0
+                         and w_eff.shape[1] % block == 0)
+                if use_pallas and tiled and step.kernel == "rir_matmul":
+                    cur = ops.rir_matmul(cur, w_eff, out_perm
+                                         if len(out_perm) > 1 else None,
+                                         block_m=bm, block_n=block,
+                                         block_k=bk)
+                else:
+                    y = jnp.dot(cur, w_eff,
+                                preferred_element_type=jnp.float32)
+                    y = y.astype(cur.dtype)
+                    cur = apply_block_perm(y, out_perm, block) \
+                        if len(out_perm) > 1 else y
+                if activation is not None and i < len(plan.steps) - 1:
+                    # elementwise: commutes with block perms
+                    cur = activation(cur)
+                if traced:
+                    cur = jax.block_until_ready(cur)
+                    obs.record_span("exec.step", t0,
+                                    _step_attrs(self._provenance(), i, step))
+            out = invert_block_perm(cur, perms[-1], block) \
+                if len(perms[-1]) > 1 else cur
+        return out
 
 
 def prepare_plan(plan: ExecutionPlan, x_dim: int,
@@ -574,6 +621,12 @@ class PreparedNetwork:
                 out_shape=(wl.N, wl.P, wl.Q, wl.M),
                 block_m=bm, block_k=bk, bias=bias))
         self._buffer_set = set(graph.buffer_sources())
+        self._prov: Optional[Dict[str, object]] = None
+
+    def _provenance(self) -> Dict[str, object]:
+        if self._prov is None:
+            self._prov = _plan_provenance(self.plan)
+        return self._prov
 
     # ------------------------------------------------------------- execution
     def _join_term(self, st: _NetStep, je: _JoinExec, buf: jax.Array,
@@ -600,63 +653,81 @@ class PreparedNetwork:
                  use_pallas: bool = True) -> jax.Array:
         block = self.block
         N, H, W, C = self.input_shape
-        a = adapt_activation(jnp.asarray(x, jnp.float32), H, W, C)
-        if a.shape[0] != N:
-            raise PlanError(f"batch {a.shape[0]} != planned N={N}")
-        cur = a.reshape(N * H * W, C)
-        if len(self.perms[0]) > 1:
-            cur = apply_block_perm(cur, self.perms[0], block)
-        buffers: Dict[int, jax.Array] = {}
-        last = len(self.steps) - 1
-        for i, st in enumerate(self.steps):
-            if st.row_map is None:
-                patches = cur
-            else:
-                padded = jnp.concatenate(
-                    [cur, jnp.zeros((1, cur.shape[1]), cur.dtype)])
-                patches = padded[st.row_map].reshape(
-                    st.rows_out, st.k_width)
-            patches = _pad_axis(_pad_axis(patches, st.block_m, 0),
-                                st.block_k, 1)
-            fused_res = None
-            for je in st.joins:
-                if not je.fused:
-                    continue
-                term = buffers[je.src]
-                fused_res = term if fused_res is None else fused_res + term
-            out_perm = st.out_perm if len(st.out_perm) > 1 else None
-            if use_pallas:
-                res_pad = None
-                if fused_res is not None:
-                    res_pad = _pad_axis(_pad_axis(fused_res, st.block_m, 0),
-                                        block, 1)
-                y = ops.rir_matmul(patches, st.w_eff, out_perm,
-                                   residual=res_pad, block_m=st.block_m,
-                                   block_n=block, block_k=st.block_k)
-            else:
-                y = jnp.dot(patches, st.w_eff,
-                            preferred_element_type=jnp.float32)
-                if out_perm is not None:
-                    y = apply_block_perm(y, out_perm, block)
-                if fused_res is not None:
-                    y = y + _pad_axis(_pad_axis(fused_res, st.block_m, 0),
-                                      block, 1)
-            y = y[:st.rows_out, :st.wl.M]
-            if st.bias is not None:
-                y = y + st.bias[None, :]
-            for je in st.joins:
-                if je.fused:
-                    continue
-                y = y + self._join_term(st, je, buffers[je.src], block)
-            if activation is not None and i < last:
-                y = activation(y)
-            if i in self._buffer_set:
-                buffers[i] = y
-            cur = y
-        out_perm = self.perms[-1]
-        if len(out_perm) > 1:
-            cur = invert_block_perm(cur, out_perm, block)
-        return cur.reshape(self.steps[-1].out_shape)
+        # traced executions bracket every layer with a device sync and record
+        # the measured wall-clock next to the plan's modeled cycles/energy
+        # (see ``_step_attrs``); values are untouched, so outputs are
+        # bit-identical with tracing on or off
+        traced = obs.enabled()
+        with obs.span("exec.network",
+                      dict(self._provenance(), batch=int(N),
+                           pallas=bool(use_pallas)) if traced else None):
+            a = adapt_activation(jnp.asarray(x, jnp.float32), H, W, C)
+            if a.shape[0] != N:
+                raise PlanError(f"batch {a.shape[0]} != planned N={N}")
+            cur = a.reshape(N * H * W, C)
+            if len(self.perms[0]) > 1:
+                cur = apply_block_perm(cur, self.perms[0], block)
+            buffers: Dict[int, jax.Array] = {}
+            last = len(self.steps) - 1
+            for i, st in enumerate(self.steps):
+                if traced:
+                    t0 = obs.now_us()
+                if st.row_map is None:
+                    patches = cur
+                else:
+                    padded = jnp.concatenate(
+                        [cur, jnp.zeros((1, cur.shape[1]), cur.dtype)])
+                    patches = padded[st.row_map].reshape(
+                        st.rows_out, st.k_width)
+                patches = _pad_axis(_pad_axis(patches, st.block_m, 0),
+                                    st.block_k, 1)
+                fused_res = None
+                for je in st.joins:
+                    if not je.fused:
+                        continue
+                    term = buffers[je.src]
+                    fused_res = term if fused_res is None \
+                        else fused_res + term
+                out_perm = st.out_perm if len(st.out_perm) > 1 else None
+                if use_pallas:
+                    res_pad = None
+                    if fused_res is not None:
+                        res_pad = _pad_axis(
+                            _pad_axis(fused_res, st.block_m, 0), block, 1)
+                    y = ops.rir_matmul(patches, st.w_eff, out_perm,
+                                       residual=res_pad, block_m=st.block_m,
+                                       block_n=block, block_k=st.block_k)
+                else:
+                    y = jnp.dot(patches, st.w_eff,
+                                preferred_element_type=jnp.float32)
+                    if out_perm is not None:
+                        y = apply_block_perm(y, out_perm, block)
+                    if fused_res is not None:
+                        y = y + _pad_axis(
+                            _pad_axis(fused_res, st.block_m, 0), block, 1)
+                y = y[:st.rows_out, :st.wl.M]
+                if st.bias is not None:
+                    y = y + st.bias[None, :]
+                for je in st.joins:
+                    if je.fused:
+                        continue
+                    y = y + self._join_term(st, je, buffers[je.src], block)
+                if activation is not None and i < last:
+                    y = activation(y)
+                if traced:
+                    y = jax.block_until_ready(y)
+                    obs.record_span(
+                        "exec.step", t0,
+                        _step_attrs(self._provenance(), i,
+                                    self.plan.steps[i]))
+                if i in self._buffer_set:
+                    buffers[i] = y
+                cur = y
+            out_perm = self.perms[-1]
+            if len(out_perm) > 1:
+                cur = invert_block_perm(cur, out_perm, block)
+            out = cur.reshape(self.steps[-1].out_shape)
+        return out
 
 
 def prepare_network(plan: ExecutionPlan, graph: LayerGraph,

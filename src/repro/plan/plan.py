@@ -15,6 +15,7 @@ import json
 import pathlib
 from typing import Dict, List, Optional, Tuple
 
+from repro import obs
 from repro.core.dataflow import ConvWorkload, Dataflow
 from repro.core.layoutloop import EvalConfig
 
@@ -181,6 +182,14 @@ class ExecutionPlan:
     def __len__(self) -> int:
         return len(self.steps)
 
+    @property
+    def plan_id(self) -> str:
+        """Short stable provenance id — the ``(graph_hash, config_key)``
+        digest trace spans carry so a measured interval can be joined back
+        to exactly one plan artifact."""
+        return hashlib.sha256(
+            f"{self.graph_hash}|{self.config_key}".encode()).hexdigest()[:16]
+
     def boundary_layouts(self) -> List[str]:
         """[input layout of layer 0, out layout of each layer] — the DP path."""
         if not self.steps:
@@ -246,6 +255,11 @@ class PlanCache:
 
     In-memory by default; pass ``directory`` to persist artifacts as JSON so
     later processes (e.g. the serving launcher) skip planning entirely.
+
+    With observability enabled (``repro.obs``), every lookup lands in the
+    ``plan_cache.*`` counters: hits by tier (``mem``/``disk``), misses, and
+    evictions by reason (``corrupt``/``mismatch``) — the numbers behind any
+    claim that serving hides planning latency behind the cache.
     """
 
     def __init__(self, directory: str | pathlib.Path | None = None):
@@ -271,6 +285,7 @@ class PlanCache:
         """
         key = (graph_hash, cfg_key)
         if key in self._mem:
+            obs.inc_counter("plan_cache.hit", tier="mem")
             return self._mem[key]
         p = self._path(key)
         if p and p.exists():
@@ -278,17 +293,24 @@ class PlanCache:
                 plan = ExecutionPlan.load(p)
             except (ValueError, KeyError, TypeError, OSError):
                 p.unlink(missing_ok=True)   # corrupt artifact: re-plan
+                obs.inc_counter("plan_cache.evict", reason="corrupt")
+                obs.inc_counter("plan_cache.miss")
                 return None
             if (plan.graph_hash, plan.config_key) != key:
                 p.unlink(missing_ok=True)   # truncated-name collision
+                obs.inc_counter("plan_cache.evict", reason="mismatch")
+                obs.inc_counter("plan_cache.miss")
                 return None
             self._mem[key] = plan
+            obs.inc_counter("plan_cache.hit", tier="disk")
             return plan
+        obs.inc_counter("plan_cache.miss")
         return None
 
     def put(self, plan: ExecutionPlan) -> None:
         key = (plan.graph_hash, plan.config_key)
         self._mem[key] = plan
+        obs.inc_counter("plan_cache.put")
         p = self._path(key)
         if p:
             plan.save(p)
@@ -300,6 +322,8 @@ class PlanCache:
         hit = self.get(graph.graph_hash(), ck)
         if hit is not None:
             return hit
-        plan = planner_fn(graph, cfg)
+        with obs.span("plan_cache.plan") as sp:
+            sp.set("graph", getattr(graph, "name", "?"))
+            plan = planner_fn(graph, cfg)
         self.put(plan)
         return plan

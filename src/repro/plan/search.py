@@ -26,6 +26,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.dataflow import (Dataflow, enumerate_dataflows,
                                  enumerate_tilings)
 from repro.core.layout import Layout, conv_layout_space
@@ -176,6 +177,18 @@ class NetworkPlanner:
         self._use_lattice = use_lattice
         self._tables: Dict[int, LatticeMetrics] = {}
         self._keys: Dict[int, "np.ndarray"] = {}
+        if obs.enabled():
+            # candidate-count gauges: how big the search space this planner
+            # instance sweeps actually is (guarded — the sums are real work)
+            n_pts = sum(len(self._dfs[i]) * len(self._tilings[i])
+                        for i in range(len(graph)))
+            obs.set_gauge("planner.layers", len(graph))
+            obs.set_gauge("planner.dataflow_candidates",
+                          sum(len(v) for v in self._dfs.values()))
+            obs.set_gauge("planner.tiling_candidates",
+                          sum(len(v) for v in self._tilings.values()))
+            obs.set_gauge("planner.lattice_points",
+                          n_pts * len(self.layouts) * len(self._modes))
 
     def _table(self, i: int) -> LatticeMetrics:
         """Layer ``i``'s cost table, built on first touch (one lattice pass).
@@ -185,9 +198,12 @@ class NetworkPlanner:
         """
         tab = self._tables.get(i)
         if tab is None:
-            tab = evaluate_lattice(self.graph.layers[i], self._dfs[i],
-                                   self.layouts, self._modes, self.cfg,
-                                   tilings=self._tilings[i])
+            with obs.span("planner.lattice") as sp:
+                sp.set("layer", i).set("workload", self.graph.layers[i].name)
+                tab = evaluate_lattice(self.graph.layers[i], self._dfs[i],
+                                       self.layouts, self._modes, self.cfg,
+                                       tilings=self._tilings[i])
+            obs.inc_counter("planner.lattice_builds")
             self._tables[i] = tab
             self._keys[i] = tab.key(self.opts.objective)
         return tab
@@ -310,31 +326,52 @@ class NetworkPlanner:
 
     # ----------------------------------------------------------------- planners
     def plan(self) -> ExecutionPlan:
-        """Beam/Viterbi DP over boundary layouts (greedy path injected)."""
-        beams: List[_Path] = [
-            _Path(0.0, 0.0, 0.0, 0.0, (l.name(),), ()) for l in self.layouts]
-        for i in range(len(self.graph)):
-            grown = [self.extend(p, i, l_out)
-                     for p in beams for l_out in self.layouts]
-            grown.sort(key=lambda p: p.key)
-            kept: List[_Path] = []
-            seen_last: Dict[str, int] = {}
-            # keep the best few per terminal state, best-first overall
-            per_state = max(1, self.opts.beam_width // len(self.layouts))
-            for p in grown:
-                last = p.boundaries[-1]
-                if seen_last.get(last, 0) >= per_state:
-                    continue
-                seen_last[last] = seen_last.get(last, 0) + 1
-                kept.append(p)
-                if len(kept) >= self.opts.beam_width:
-                    break
-            beams = kept
-        best = min(beams, key=lambda p: p.key)
-        greedy = self._greedy_path()
-        if greedy.key < best.key:
-            best = greedy
-        return self._to_plan(best, "network-dp")
+        """Beam/Viterbi DP over boundary layouts (greedy path injected).
+
+        With tracing on, the three phases land as nested spans —
+        ``planner.lattice_build`` (every layer's cost table, forced up
+        front), ``planner.dp_extend`` (the beam sweep) and
+        ``planner.argmin`` (final selection + greedy injection) — under one
+        ``planner.plan`` root carrying the graph provenance.
+        """
+        with obs.span("planner.plan") as root:
+            root.set("graph", self.graph.name) \
+                .set("objective", self.opts.objective)
+            with obs.span("planner.lattice_build"):
+                self.precompute_tables()
+            with obs.span("planner.dp_extend"):
+                beams: List[_Path] = [
+                    _Path(0.0, 0.0, 0.0, 0.0, (l.name(),), ())
+                    for l in self.layouts]
+                for i in range(len(self.graph)):
+                    grown = [self.extend(p, i, l_out)
+                             for p in beams for l_out in self.layouts]
+                    grown.sort(key=lambda p: p.key)
+                    kept: List[_Path] = []
+                    seen_last: Dict[str, int] = {}
+                    # keep the best few per terminal state, best-first overall
+                    per_state = max(1,
+                                    self.opts.beam_width // len(self.layouts))
+                    for p in grown:
+                        last = p.boundaries[-1]
+                        if seen_last.get(last, 0) >= per_state:
+                            continue
+                        seen_last[last] = seen_last.get(last, 0) + 1
+                        kept.append(p)
+                        if len(kept) >= self.opts.beam_width:
+                            break
+                    beams = kept
+            with obs.span("planner.argmin"):
+                best = min(beams, key=lambda p: p.key)
+                greedy = self._greedy_path()
+                if greedy.key < best.key:
+                    best = greedy
+            plan = self._to_plan(best, "network-dp")
+            if obs.enabled():   # plan_id hashes; don't compute it when off
+                root.set("graph_hash", plan.graph_hash) \
+                    .set("plan_id", plan.plan_id) \
+                    .set("total_cycles", plan.total_cycles)
+        return plan
 
     def _greedy_boundaries(self) -> List[str]:
         """Each layer picks its locally-best input layout, boundary costs be

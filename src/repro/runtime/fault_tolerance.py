@@ -24,6 +24,8 @@ import math
 import time
 from typing import Callable, Dict, List, Sequence, Set, Tuple
 
+from repro import obs
+
 # Failure types the restart loop treats as node/runtime faults and recovers
 # from: XLA device errors surface as RuntimeError, collective timeouts as
 # TimeoutError, and host/network/filesystem loss as ConnectionError/OSError.
@@ -122,6 +124,11 @@ class TrainSupervisor:
     ``failure_detector()`` is polled between steps; on failure the supervisor
     calls ``restart_fn(alive_hosts)`` (rebuild mesh + restore checkpoint) and
     continues from the restored step.
+
+    With observability on, every recovery lands in counters: ``train.faults``
+    labeled by exception type, ``train.restarts`` labeled by cause
+    (``fault`` vs ``detector``) — the data behind any claim about how often
+    the fleet actually falls over.
     """
     total_steps: int
     step_fn: Callable[[int], Dict]
@@ -141,15 +148,18 @@ class TrainSupervisor:
                 if restarts >= self.max_restarts:
                     raise RuntimeError("restart budget exhausted")
                 restarts += 1
+                obs.inc_counter("train.restarts", cause="detector")
                 self.restart_fn()
                 step = self.restore_fn()
                 continue
             try:
                 metrics = self.step_fn(step)
-            except STEP_FAULT_TYPES:
+            except STEP_FAULT_TYPES as e:
+                obs.inc_counter("train.faults", type=type(e).__name__)
                 if restarts >= self.max_restarts:
                     raise
                 restarts += 1
+                obs.inc_counter("train.restarts", cause="fault")
                 self.restart_fn()
                 step = self.restore_fn()
                 continue

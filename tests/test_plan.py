@@ -4,6 +4,7 @@ import pytest
 
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.dataflow import ConvWorkload
 from repro.core.layout import Layout
 from repro.core.layoutloop import EvalConfig
@@ -27,6 +28,15 @@ def small_chain(n=3):
         ConvWorkload(M=32, C=96, P=7, Q=7, R=1, S=1, name="d"),
     ]
     return from_layers(shapes[:n], f"chain{n}")
+
+
+@pytest.fixture
+def obs_enabled():
+    """Tracing on for the test body; global obs state reset afterwards."""
+    obs.reset()
+    obs.enable()
+    yield
+    obs.reset()
 
 
 def gemm_chain():
@@ -95,7 +105,7 @@ def test_plan_json_roundtrip_lossless(tmp_path):
     assert ExecutionPlan.load(p) == plan
 
 
-def test_plan_cache_memoizes_and_persists(tmp_path):
+def test_plan_cache_memoizes_and_persists(tmp_path, obs_enabled):
     graph = small_chain(3)
     cfg = EvalConfig()
     opts = PlannerOptions(switch_modes=("rir",), layouts=SMALL_LAYOUTS,
@@ -114,11 +124,18 @@ def test_plan_cache_memoizes_and_persists(tmp_path):
     c = PlanCache(tmp_path).get_or_plan(graph, cfg, planner_fn,
                                         extra_key=opts.key())
     assert len(calls) == 1 and c == a
+    # every lookup landed in a counter: 1 plan (miss+put), then a memory
+    # hit, then the fresh process's disk hit
+    assert obs.counter_value("plan_cache.miss") == 1
+    assert obs.counter_value("plan_cache.put") == 1
+    assert obs.counter_value("plan_cache.hit", tier="mem") == 1
+    assert obs.counter_value("plan_cache.hit", tier="disk") == 1
 
 
-def test_plan_cache_corrupt_artifact_is_a_miss(tmp_path):
+def test_plan_cache_corrupt_artifact_is_a_miss(tmp_path, obs_enabled):
     """A corrupt on-disk artifact must not raise out of ``get``: it is
-    deleted, treated as a miss, and ``get_or_plan`` re-plans over it."""
+    deleted, treated as a miss, and ``get_or_plan`` re-plans over it —
+    and each eviction is visible in the ``plan_cache.evict`` counter."""
     graph = small_chain(2)
     cfg = EvalConfig()
     opts = PlannerOptions(switch_modes=("rir",), layouts=SMALL_LAYOUTS,
@@ -132,17 +149,23 @@ def test_plan_cache_corrupt_artifact_is_a_miss(tmp_path):
     plan = PlanCache(tmp_path).get_or_plan(graph, cfg, planner_fn,
                                            extra_key=opts.key())
     (artifact,) = tmp_path.glob("plan-*.json")
-    for garbage in ("{not json", '{"version": 3}'):
+    for i, garbage in enumerate(("{not json", '{"version": 3}')):
         artifact.write_text(garbage)
         cache = PlanCache(tmp_path)   # fresh: no in-memory hit
         assert cache.get(plan.graph_hash, plan.config_key) is None
         assert not artifact.exists(), "corrupt cache file not evicted"
+        assert obs.counter_value("plan_cache.evict", reason="corrupt") == i + 1
         replanned = cache.get_or_plan(graph, cfg, planner_fn,
                                       extra_key=opts.key())
         assert replanned == plan
+    # 1 initial miss + per corrupt round (evicting get + get_or_plan's get)
+    assert obs.counter_value("plan_cache.miss") == 5
+    assert obs.counter_value("plan_cache.put") == 3
+    assert obs.counter_value("plan_cache.hit", tier="mem") == 0
+    assert obs.counter_value("plan_cache.hit", tier="disk") == 0
 
 
-def test_plan_cache_validates_full_key_after_load(tmp_path):
+def test_plan_cache_validates_full_key_after_load(tmp_path, obs_enabled):
     """The filename only encodes 16-char truncated hashes; a filename
     collision (or hand-edited artifact) whose recorded full identity
     mismatches must be a miss, never the wrong plan."""
@@ -163,6 +186,8 @@ def test_plan_cache_validates_full_key_after_load(tmp_path):
     fresh = PlanCache(tmp_path)
     assert fresh.get(plan.graph_hash, plan.config_key) is None
     assert not artifact.exists(), "mismatched cache file not evicted"
+    assert obs.counter_value("plan_cache.evict", reason="mismatch") == 1
+    assert obs.counter_value("plan_cache.miss") == 2  # initial + collision
 
 
 def test_graph_hash_tracks_content():

@@ -1,5 +1,5 @@
-from .store import (CheckpointManager, latest_step, restore_pytree,
-                    save_pytree)
+from .store import (CheckpointManager, committed_steps, latest_step,
+                    restore_pytree, save_pytree)
 
-__all__ = ["CheckpointManager", "latest_step", "restore_pytree",
-           "save_pytree"]
+__all__ = ["CheckpointManager", "committed_steps", "latest_step",
+           "restore_pytree", "save_pytree"]

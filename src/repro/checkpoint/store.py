@@ -5,28 +5,47 @@ Layout (one directory per step)::
     <dir>/step_000100/
         manifest.json        # treedef, shapes, dtypes, logical shardings
         arrays/<leaf>.npy    # host-gathered (or per-shard) array data
+        digests.json         # sha256 of every npy + the manifest (integrity)
         COMMIT               # written last: presence marks a valid checkpoint
 
 Fault-tolerance contract:
 * writes go to ``step_X.tmp`` then atomically rename — a crash mid-write
-  never corrupts the latest valid checkpoint;
+  (the ``ckpt.write`` fault site fires between the two) never corrupts the
+  latest valid checkpoint;
+* every array file and the manifest get a sha256 digest in ``digests.json``,
+  written *before* COMMIT; restore verifies bytes against digests and raises
+  ``OSError`` on mismatch (bit-rot / truncation reads as an I/O fault, so
+  the retry/fallback machinery handles it like one).  Checkpoints written
+  before the sidecar existed restore without verification;
 * the manifest stores LOGICAL shardings (PartitionSpec strings), not device
   ids, so restore works on a different mesh shape (elastic restart);
 * ``CheckpointManager`` keeps the last ``keep`` checkpoints and an async
-  writer thread so the train loop never blocks on IO.
+  writer thread so the train loop never blocks on IO.  The writer retries
+  transient faults (``retry_call``, site ``ckpt.write``) and on persistent
+  failure *drops the save* (counter ``ckpt.write_failed``) rather than
+  killing the thread — the previous checkpoint stays good.
+  ``restore_latest`` walks committed steps newest-to-oldest, falling back
+  past corrupt/unreadable checkpoints (``ckpt.restore_fallback``).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import pathlib
 import re
 import shutil
 import threading
-from typing import Any, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro import obs
+from repro.runtime import faults
+from repro.runtime.retry import IO_POLICY, RetryPolicy, retry_call
+
+log = obs.get_logger("ckpt")
 
 Pytree = Any
 
@@ -43,6 +62,10 @@ def _leaf_name(path) -> str:
     return "__".join(parts) or "leaf"
 
 
+def _sha256(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
 def save_pytree(tree: Pytree, directory: str | pathlib.Path) -> None:
     d = pathlib.Path(directory)
     tmp = d.with_suffix(".tmp")
@@ -51,10 +74,14 @@ def save_pytree(tree: Pytree, directory: str | pathlib.Path) -> None:
     (tmp / "arrays").mkdir(parents=True)
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     manifest = {"leaves": []}
+    digests = {}
     for path, leaf in leaves:
         name = _leaf_name(path)
         arr = np.asarray(jax.device_get(leaf))
-        np.save(tmp / "arrays" / f"{name}.npy", arr)
+        fname = f"{name}.npy"
+        np.save(tmp / "arrays" / fname, arr)
+        digests[f"arrays/{fname}"] = _sha256((tmp / "arrays" / fname)
+                                             .read_bytes())
         spec = ""
         sh = getattr(leaf, "sharding", None)
         if sh is not None and hasattr(sh, "spec"):
@@ -62,8 +89,14 @@ def save_pytree(tree: Pytree, directory: str | pathlib.Path) -> None:
         manifest["leaves"].append(
             {"name": name, "shape": list(arr.shape), "dtype": str(arr.dtype),
              "sharding": spec})
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    manifest_bytes = json.dumps(manifest).encode()
+    (tmp / "manifest.json").write_bytes(manifest_bytes)
+    digests["manifest.json"] = _sha256(manifest_bytes)
+    (tmp / "digests.json").write_text(json.dumps(digests))
     (tmp / "COMMIT").write_text("ok")
+    # the kill-between-write-and-rename point: everything (COMMIT included)
+    # is in the temp dir; a fault here leaves the previous checkpoint intact
+    faults.site("ckpt.write")
     if d.exists():
         shutil.rmtree(d)
     os.replace(tmp, d)
@@ -72,10 +105,21 @@ def save_pytree(tree: Pytree, directory: str | pathlib.Path) -> None:
 def restore_pytree(template: Pytree, directory: str | pathlib.Path,
                    shardings: Optional[Pytree] = None) -> Pytree:
     """Restore into the structure of ``template``; if ``shardings`` given,
-    device_put each leaf with it (reshard-on-restore for elastic restarts)."""
+    device_put each leaf with it (reshard-on-restore for elastic restarts).
+
+    When a ``digests.json`` sidecar is present, every array file's bytes are
+    verified against its recorded sha256; a mismatch raises ``OSError``
+    (integrity failure is an I/O fault to the recovery machinery)."""
+    import io
+
     d = pathlib.Path(directory)
+    faults.site("ckpt.read")
     if not (d / "COMMIT").exists():
         raise FileNotFoundError(f"no committed checkpoint at {d}")
+    digests = {}
+    dig_path = d / "digests.json"
+    if dig_path.exists():
+        digests = json.loads(dig_path.read_text())
     paths = jax.tree_util.tree_flatten_with_path(template)
     leaves, treedef = paths
     sh_leaves = jax.tree_util.tree_leaves(shardings) if shardings is not None \
@@ -83,7 +127,13 @@ def restore_pytree(template: Pytree, directory: str | pathlib.Path,
     out = []
     for (path, leaf), sh in zip(leaves, sh_leaves):
         name = _leaf_name(path)
-        arr = np.load(d / "arrays" / f"{name}.npy")
+        rel = f"arrays/{name}.npy"
+        raw = (d / rel).read_bytes()
+        want = digests.get(rel)
+        if want is not None and _sha256(raw) != want:
+            raise OSError(f"checkpoint integrity failure: {d / rel} does not "
+                          f"match its recorded sha256")
+        arr = np.load(io.BytesIO(raw))
         want_dtype = getattr(leaf, "dtype", arr.dtype)
         arr = arr.astype(want_dtype)
         out.append(jax.device_put(arr, sh) if sh is not None
@@ -105,13 +155,30 @@ def latest_step(root: str | pathlib.Path) -> Optional[int]:
     return best
 
 
+def committed_steps(root: str | pathlib.Path) -> list[int]:
+    """All committed step numbers under ``root``, ascending."""
+    root = pathlib.Path(root)
+    if not root.exists():
+        return []
+    out = []
+    for p in root.iterdir():
+        m = re.fullmatch(r"step_(\d+)", p.name)
+        if m and (p / "COMMIT").exists():
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
 class CheckpointManager:
     """Async checkpointing: save() enqueues, a writer thread persists."""
 
-    def __init__(self, root: str | pathlib.Path, keep: int = 3):
+    def __init__(self, root: str | pathlib.Path, keep: int = 3, *,
+                 io_policy: RetryPolicy = IO_POLICY,
+                 sleep: Optional[Callable[[float], None]] = None):
         self.root = pathlib.Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.keep = keep
+        self._io_policy = io_policy
+        self._sleep = sleep
         self._pending: Optional[Tuple[int, Pytree]] = None
         self._lock = threading.Lock()
         self._event = threading.Event()
@@ -119,6 +186,10 @@ class CheckpointManager:
         self._stop = False
         self._thread = threading.Thread(target=self._writer, daemon=True)
         self._thread.start()
+
+    def _retry(self, fn, site: str):
+        kw = {} if self._sleep is None else {"sleep": self._sleep}
+        return retry_call(fn, site=site, policy=self._io_policy, **kw)
 
     def save(self, step: int, tree: Pytree) -> None:
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
@@ -138,9 +209,20 @@ class CheckpointManager:
                     return
                 continue
             step, tree = item
-            save_pytree(tree, self.root / f"step_{step:08d}")
-            self._gc()
-            self._done.set()
+            try:
+                self._retry(
+                    lambda: save_pytree(tree, self.root / f"step_{step:08d}"),
+                    site="ckpt.write")
+                self._gc()
+            except faults.STEP_FAULT_TYPES as e:
+                # drop the save, keep the thread (and the previous good
+                # checkpoint) alive — the next save() gets a fresh chance
+                obs.inc_counter("ckpt.write_failed", type=type(e).__name__)
+                log.warning("checkpoint write for step %d failed (%s: %s); "
+                            "keeping previous checkpoint", step,
+                            type(e).__name__, e)
+            finally:
+                self._done.set()
 
     def _gc(self) -> None:
         steps = sorted(int(re.fullmatch(r"step_(\d+)", p.name).group(1))
@@ -156,12 +238,25 @@ class CheckpointManager:
     def restore_latest(self, template: Pytree,
                        shardings: Optional[Pytree] = None
                        ) -> Tuple[Optional[int], Optional[Pytree]]:
-        step = latest_step(self.root)
-        if step is None:
-            return None, None
-        tree = restore_pytree(template, self.root / f"step_{step:08d}",
-                              shardings)
-        return step, tree
+        """Restore the newest committed checkpoint, falling back past
+        corrupt/unreadable ones to the next-oldest (``ckpt.restore_fallback``
+        counts how often the newest was not the one restored)."""
+        steps = committed_steps(self.root)
+        for idx, step in enumerate(reversed(steps)):
+            try:
+                tree = self._retry(
+                    lambda: restore_pytree(
+                        template, self.root / f"step_{step:08d}", shardings),
+                    site="ckpt.read")
+            except faults.STEP_FAULT_TYPES as e:
+                obs.inc_counter("ckpt.restore_failed", type=type(e).__name__)
+                log.warning("restore of step %d failed (%s: %s); trying "
+                            "older checkpoint", step, type(e).__name__, e)
+                continue
+            if idx > 0:
+                obs.inc_counter("ckpt.restore_fallback")
+            return step, tree
+        return None, None
 
     def close(self) -> None:
         self._stop = True

@@ -12,7 +12,6 @@ plan/prefill/decode spans and per-request latency histograms
 from __future__ import annotations
 
 import argparse
-import pathlib
 import time
 
 import jax
@@ -25,42 +24,47 @@ log = obs.get_logger("serve")
 
 
 def _plan_for(cfg, args):
-    """Load (or co-search and save) the network execution plan for this arch.
+    """Resolve the network execution plan for this arch — never crash.
 
-    The load-or-replan logic is ``PlanCache.get_or_plan``: the ``--plan``
-    artifact is seeded into an in-memory cache, so a valid matching file is
-    a hit while a corrupt or stale one (graph hash / config mismatch, e.g.
-    after a config change) occupies the wrong key, misses, and is re-planned
-    and overwritten.  Returns the ``ExecutionPlan``.
+    Routes through the degradation ladder (``repro.plan.resolve_plan``): the
+    ``--plan`` artifact seeds the cache (tier 0, a stale/corrupt artifact is
+    quarantined and missed), a miss re-plans under retry (tier 1, saved back
+    to the artifact), and planner failure degrades to greedy then to a fixed
+    layout instead of taking serving down.  ``--plan-deadline`` bounds the
+    whole resolution.  Returns the ``ResolvedPlan`` (plan + tier).
     """
     from repro.core.layoutloop import EvalConfig
-    from repro.plan import (ExecutionPlan, NetworkPlanner, PlanCache,
-                            PlannerOptions, from_arch_config)
+    from repro.plan import (PlanCache, PlannerOptions, from_arch_config,
+                            resolve_plan)
 
     graph = from_arch_config(cfg, seq=args.prompt_len + args.gen)
     eval_cfg = EvalConfig()
     opts = PlannerOptions(switch_modes=("rir",), parallel_dims=("C", "P", "Q"))
-    path = pathlib.Path(args.plan)
-    cache = PlanCache()
-    if path.exists():
-        try:
-            cache.put(ExecutionPlan.load(path))
-        except Exception as e:  # unreadable/corrupt/foreign-version artifact
-            log.warning("plan %s is unreadable (%s); re-planning", path, e)
-
-    replanned = []
-
-    def planner_fn(g, c):
-        replanned.append(True)
-        return NetworkPlanner(g, c, opts).plan()
-
-    plan = cache.get_or_plan(graph, eval_cfg, planner_fn,
-                             extra_key=opts.key())
-    if replanned:
-        plan.save(path)
-        log.info("planned %d layers -> %s", len(plan), path)
+    resolved = resolve_plan(graph, eval_cfg, opts, cache=PlanCache(),
+                            artifact=args.plan,
+                            deadline_s=args.plan_deadline)
+    plan = resolved.plan
+    if resolved.tier == 1:
+        log.info("planned %d layers -> %s", len(plan), args.plan)
+    elif resolved.tier > 1:
+        log.warning("degraded plan tier=%s (planner unavailable)",
+                    resolved.tier_name)
     log.info("%s", plan.summary())
-    return plan
+    return resolved
+
+
+def _decode_block_hints(plan):
+    """Distinct kernel (block_m, block_k) shapes the plan's steps ask for.
+
+    The decode path's attention/MLP matmuls run through the model's own
+    jitted step today, not the plan executor; these hints are *advisory* —
+    logged so an operator can see what block shapes a plan-driven decode
+    would use — and double as the single consumption point that keeps the
+    resolved plan threaded through ``main()``.
+    """
+    from repro.plan import step_kernel_blocks
+
+    return sorted({step_kernel_blocks(s) for s in plan.steps})
 
 
 def main() -> None:
@@ -74,6 +78,9 @@ def main() -> None:
     ap.add_argument("--plan", default=None, metavar="PATH",
                     help="execution-plan artifact: load it if it exists, "
                     "else network-plan this arch and save it there")
+    ap.add_argument("--plan-deadline", type=float, default=30.0,
+                    help="seconds the plan resolution may spend before "
+                    "degrading straight to a fixed-layout plan")
     ap.add_argument("--log-level", default=None,
                     choices=["debug", "info", "warning", "error"],
                     help="console log threshold (default: REPRO_LOG or info)")
@@ -88,9 +95,15 @@ def main() -> None:
     from repro.models import build_model
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    plan_attrs = {}
     if args.plan:
         with obs.span("serve.plan", {"arch": cfg.name}):
-            _plan_for(cfg, args)
+            resolved = _plan_for(cfg, args)
+        hints = _decode_block_hints(resolved.plan)
+        log.info("plan %s tier=%s; decode kernel block hints %s",
+                 resolved.plan.plan_id, resolved.tier_name, hints)
+        plan_attrs = {"plan_id": resolved.plan.plan_id,
+                      "plan_tier": resolved.tier_name}
     model = build_model(cfg)
     mesh = make_local_mesh(args.model_axis)
     # independent streams: reusing one key for params AND data would
@@ -106,7 +119,8 @@ def main() -> None:
     traced = obs.enabled()
     with mesh:
         with obs.span("serve.prefill", {"arch": cfg.name, "batch": B,
-                                        "prompt_len": args.prompt_len}
+                                        "prompt_len": args.prompt_len,
+                                        **plan_attrs}
                       if traced else None):
             t0 = time.perf_counter()
             if cfg.family in ("ssm", "hybrid"):
@@ -124,7 +138,7 @@ def main() -> None:
         out = [tokens]
         t0 = time.perf_counter()
         with obs.span("serve.decode", {"arch": cfg.name, "batch": B,
-                                       "gen": args.gen}
+                                       "gen": args.gen, **plan_attrs}
                       if traced else None):
             for _ in range(args.gen - 1):
                 if traced:

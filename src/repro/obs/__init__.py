@@ -12,7 +12,15 @@ layer of the stack:
   ``jax.block_until_ready``, recorded next to the step's modeled
   cycles/energy from the plan artifact,
 * ``launch.serve`` — per-request prefill/decode latency histograms,
-* ``TrainSupervisor`` — fault/retry counters by fault type.
+* ``TrainSupervisor`` — fault/retry counters by fault type plus restart
+  causes and a ``train.backoff_s`` histogram,
+* the robustness layer — ``faults.injected{site=}`` (fault injection),
+  ``retry.attempts``/``retry.exhausted{site=}`` (backoff),
+  ``degrade.tier{level=}`` (plan degradation ladder),
+  ``plan_cache.quarantined``/``plan_cache.io_error``,
+  ``ckpt.write_failed``/``ckpt.restore_failed``/``ckpt.restore_fallback``,
+  and ``heartbeat.dropped{type=}`` — the counters
+  ``python -m repro.runtime.chaos`` verifies injections against.
 
 The disabled path is a hard no-op: one module-level flag, no event dicts, no
 string formatting, no timestamps (see ``trace.NULL_SPAN``), so production

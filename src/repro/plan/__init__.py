@@ -4,8 +4,9 @@
 *whole network*: a layer-graph IR (``graph``), a Viterbi/DP co-search over
 layer-boundary layouts with reorder-implementation transition costs
 (``search``), a serializable ``ExecutionPlan`` artifact with a plan cache
-(``plan``), and a plan-driven executor that runs the schedule through the
-Pallas RIR kernels (``executor``).
+(``plan``), a degradation ladder that always resolves *a* plan even under
+cache/planner faults (``fallback``), and a plan-driven executor that runs
+the schedule through the Pallas RIR kernels (``executor``).
 """
 from .graph import (LayerGraph, bert_graph, from_arch_config, from_layers,
                     mobilenet_v3_graph, resnet50_graph)
@@ -13,6 +14,7 @@ from .plan import (ExecutionPlan, JoinSpec, PlanCache, PlanStep, config_key,
                    layout_block_perm)
 from .search import (NetworkPlanner, PlannerOptions, brute_force_plan,
                      fixed_plan, greedy_plan, plan_network)
+from .fallback import TIER_NAMES, ResolvedPlan, resolve_plan
 from .executor import (PlanError, PreparedNetwork, PreparedPlan,
                        adapt_activation, execute_network,
                        execute_network_reference, execute_plan,
@@ -27,6 +29,7 @@ __all__ = [
     "layout_block_perm",
     "NetworkPlanner", "PlannerOptions", "plan_network", "greedy_plan",
     "brute_force_plan", "fixed_plan",
+    "TIER_NAMES", "ResolvedPlan", "resolve_plan",
     "PlanError", "PreparedPlan", "prepare_plan", "execute_plan",
     "execute_plan_reference", "permute_weight_blocks",
     "PreparedNetwork", "prepare_network", "execute_network",

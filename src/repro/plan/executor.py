@@ -56,6 +56,7 @@ import numpy as np
 from repro import obs
 from repro.core.workloads import input_channels, is_depthwise, weight_shape
 from repro.kernels import ops, ref
+from repro.runtime import faults
 
 from .graph import LayerGraph
 from .plan import RIR_BLOCK, ExecutionPlan, PlanStep, layout_block_perm
@@ -289,6 +290,7 @@ class PreparedPlan:
             cur = apply_block_perm(x, perms[0], block) \
                 if len(perms[0]) > 1 else x
             for i, (step, w_eff) in enumerate(zip(plan.steps, self.w_eff)):
+                faults.site("exec.dispatch")
                 if traced:
                     t0 = obs.now_us()
                 out_perm = perms[i + 1]
@@ -670,6 +672,7 @@ class PreparedNetwork:
             buffers: Dict[int, jax.Array] = {}
             last = len(self.steps) - 1
             for i, st in enumerate(self.steps):
+                faults.site("exec.dispatch")
                 if traced:
                     t0 = obs.now_us()
                 if st.row_map is None:

@@ -12,12 +12,17 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os
 import pathlib
 from typing import Dict, List, Optional, Tuple
 
 from repro import obs
 from repro.core.dataflow import ConvWorkload, Dataflow
 from repro.core.layoutloop import EvalConfig
+from repro.runtime import faults
+from repro.runtime.retry import IO_POLICY, RetryPolicy, retry_call
+
+log = obs.get_logger("plan")
 
 # v2 added the planned on-chip tiling (``PlanStep.tiles`` + the dataflow's
 # ``tiles`` coordinate); v3 adds the double-buffer choice
@@ -227,12 +232,19 @@ class ExecutionPlan:
             version=int(d["version"]))
 
     def save(self, path: str | pathlib.Path) -> None:
+        """Atomic write: temp file + rename, so a crash mid-write (the
+        ``plan.save`` fault site fires between the two) always leaves the
+        previous artifact loadable — never a half-written plan."""
         p = pathlib.Path(path)
         p.parent.mkdir(parents=True, exist_ok=True)
-        p.write_text(self.to_json())
+        tmp = p.with_name(p.name + ".tmp")
+        tmp.write_text(self.to_json())
+        faults.site("plan.save")
+        os.replace(tmp, p)
 
     @staticmethod
     def load(path: str | pathlib.Path) -> "ExecutionPlan":
+        faults.site("plan.load")
         return ExecutionPlan.from_json(pathlib.Path(path).read_text())
 
     def summary(self) -> str:
@@ -256,15 +268,28 @@ class PlanCache:
     In-memory by default; pass ``directory`` to persist artifacts as JSON so
     later processes (e.g. the serving launcher) skip planning entirely.
 
+    Robustness contract: ``get`` never raises and never returns a plan for a
+    different (graph, config).  Disk reads/writes go through the
+    ``plan_cache.io`` fault site under retry (``io_policy``), so transient
+    I/O faults are absorbed; a *persistently* failing read is just a miss
+    (``plan_cache.io_error``).  A corrupt or identity-mismatched artifact is
+    **quarantined** — moved aside into ``<dir>/quarantine/`` for postmortem
+    instead of silently deleted — and treated as a miss.
+
     With observability enabled (``repro.obs``), every lookup lands in the
-    ``plan_cache.*`` counters: hits by tier (``mem``/``disk``), misses, and
-    evictions by reason (``corrupt``/``mismatch``) — the numbers behind any
-    claim that serving hides planning latency behind the cache.
+    ``plan_cache.*`` counters: hits by tier (``mem``/``disk``), misses,
+    evictions/quarantines by reason (``corrupt``/``mismatch``), and I/O
+    failures — the numbers behind any claim that serving hides planning
+    latency behind the cache.
     """
 
-    def __init__(self, directory: str | pathlib.Path | None = None):
+    def __init__(self, directory: str | pathlib.Path | None = None, *,
+                 io_policy: RetryPolicy = IO_POLICY,
+                 sleep=None):
         self._mem: Dict[Tuple[str, str], ExecutionPlan] = {}
         self._dir = pathlib.Path(directory) if directory else None
+        self._io_policy = io_policy
+        self._sleep = sleep
         if self._dir:
             self._dir.mkdir(parents=True, exist_ok=True)
 
@@ -273,15 +298,35 @@ class PlanCache:
             return None
         return self._dir / f"plan-{key[0][:16]}-{key[1][:16]}.json"
 
+    def _retry(self, fn):
+        kw = {} if self._sleep is None else {"sleep": self._sleep}
+        return retry_call(fn, site="plan_cache.io", policy=self._io_policy,
+                          **kw)
+
+    def _quarantine(self, p: pathlib.Path, reason: str) -> None:
+        """Move a bad artifact aside (keep it for postmortem); never raise."""
+        try:
+            qdir = p.parent / "quarantine"
+            qdir.mkdir(exist_ok=True)
+            target = qdir / p.name
+            n = 0
+            while target.exists():
+                n += 1
+                target = qdir / f"{p.name}.{n}"
+            os.replace(p, target)
+            log.warning("quarantined %s artifact %s -> %s", reason, p, target)
+        except OSError:
+            p.unlink(missing_ok=True)   # quarantine is best-effort
+        obs.inc_counter("plan_cache.evict", reason=reason)
+        obs.inc_counter("plan_cache.quarantined", reason=reason)
+
     def get(self, graph_hash: str, cfg_key: str) -> Optional[ExecutionPlan]:
         """Cached plan for the FULL ``(graph_hash, cfg_key)``, or ``None``.
 
         The on-disk filename only encodes truncated hashes, so a loaded
         artifact is re-validated against the full key: a corrupt/unreadable
         file or one whose recorded identity mismatches (hash collision,
-        hand-edited artifact) is deleted and treated as a miss — ``get``
-        never raises on bad cache contents and never returns a plan for a
-        different (graph, config).
+        hand-edited artifact) is quarantined and treated as a miss.
         """
         key = (graph_hash, cfg_key)
         if key in self._mem:
@@ -290,15 +335,21 @@ class PlanCache:
         p = self._path(key)
         if p and p.exists():
             try:
-                plan = ExecutionPlan.load(p)
-            except (ValueError, KeyError, TypeError, OSError):
-                p.unlink(missing_ok=True)   # corrupt artifact: re-plan
-                obs.inc_counter("plan_cache.evict", reason="corrupt")
+                plan = self._retry(lambda: self._disk_load(p))
+            except (ValueError, KeyError, TypeError):
+                self._quarantine(p, "corrupt")
                 obs.inc_counter("plan_cache.miss")
                 return None
+            except faults.STEP_FAULT_TYPES as e:
+                # persistent I/O failure: the file may be fine, the disk is
+                # not — miss without quarantining, the planner covers for it
+                obs.inc_counter("plan_cache.io_error", op="get")
+                obs.inc_counter("plan_cache.miss")
+                log.warning("plan cache read failed (%s: %s); re-planning",
+                            type(e).__name__, e)
+                return None
             if (plan.graph_hash, plan.config_key) != key:
-                p.unlink(missing_ok=True)   # truncated-name collision
-                obs.inc_counter("plan_cache.evict", reason="mismatch")
+                self._quarantine(p, "mismatch")
                 obs.inc_counter("plan_cache.miss")
                 return None
             self._mem[key] = plan
@@ -307,13 +358,29 @@ class PlanCache:
         obs.inc_counter("plan_cache.miss")
         return None
 
+    def _disk_load(self, p: pathlib.Path) -> ExecutionPlan:
+        faults.site("plan_cache.io")
+        return ExecutionPlan.load(p)
+
+    def _disk_store(self, plan: ExecutionPlan, p: pathlib.Path) -> None:
+        faults.site("plan_cache.io")
+        plan.save(p)
+
     def put(self, plan: ExecutionPlan) -> None:
+        """Cache a plan; the disk write is retried and, if it persistently
+        fails, *dropped* (the in-memory tier still serves it) — a full disk
+        must never take serving down."""
         key = (plan.graph_hash, plan.config_key)
         self._mem[key] = plan
         obs.inc_counter("plan_cache.put")
         p = self._path(key)
         if p:
-            plan.save(p)
+            try:
+                self._retry(lambda: self._disk_store(plan, p))
+            except faults.STEP_FAULT_TYPES as e:
+                obs.inc_counter("plan_cache.io_error", op="put")
+                log.warning("plan cache write failed (%s: %s); serving from "
+                            "memory only", type(e).__name__, e)
 
     def get_or_plan(self, graph, cfg: EvalConfig, planner_fn,
                     extra_key: str = "") -> ExecutionPlan:

@@ -1,0 +1,341 @@
+"""Chaos smoke: the fault-injection harness exercising the whole stack.
+
+    PYTHONPATH=src python -m repro.runtime.chaos --seed 0
+        [--graph tiny|resnet50|mobv3] [--arch llama3p2_3b]
+        [--skip-serve] [--report out.json]
+
+Runs a planned network execution and an LM serve smoke under a seeded
+``FaultSchedule`` covering every fault site (plan load/save, plan-cache I/O,
+kernel dispatch, checkpoint write/read, heartbeat) and asserts the three
+robustness claims the tentpole makes:
+
+1. **no injected fault escapes** — every scheduled fault fires
+   (``schedule.all_fired()``, counter-verified against
+   ``faults.injected{site=}``) and none surfaces as a crash;
+2. **degradation preserves outputs** — when the ladder stays at tier <= 1
+   (cached / re-planned) the faulted run's outputs are bit-identical to the
+   fault-free baseline (the planner is deterministic);
+3. **everything is observable** — each injection, retry, and tier choice
+   lands in its obs counter.
+
+The checkpoint phase includes the kill-between-write-and-rename case: a
+save whose retries are all injected leaves the previous committed
+checkpoint fully restorable.  ``--report`` writes a JSON summary (counters,
+per-site injection counts, resolved tiers) for the CI artifact upload.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import tempfile
+from typing import List, Optional
+
+
+def _nosleep(_s: float) -> None:
+    return None
+
+
+def _fail(msg: str) -> None:
+    print(f"[chaos] FAIL: {msg}", file=sys.stderr)
+    raise AssertionError(msg)
+
+
+def _counter_baseline(schedule) -> dict:
+    """Per-site ``faults.injected`` counter values before arming, so the
+    post-run check compares deltas (phases share one obs registry)."""
+    from repro import obs
+
+    return {name: obs.counter_value("faults.injected", site=name)
+            for name in schedule.sites}
+
+
+def _check_schedule(schedule, label: str, base: dict) -> None:
+    """Every count-mode site fired exactly its scheduled count, and the obs
+    counters agree with the schedule's own books."""
+    from repro import obs
+
+    for name, spec in schedule.sites.items():
+        got = schedule.injected(name)
+        if got != spec.count:
+            _fail(f"{label}: site {name!r} injected {got} != "
+                  f"scheduled {spec.count}")
+        ctr = obs.counter_value("faults.injected", site=name) - base[name]
+        if ctr != spec.count:
+            _fail(f"{label}: counter faults.injected{{site={name}}} grew "
+                  f"{ctr} != {spec.count}")
+    if not schedule.all_fired():
+        _fail(f"{label}: schedule.all_fired() is false")
+
+
+def _network_phase(args, tmp: pathlib.Path) -> dict:
+    """Planned network execution under plan-cache / plan-load / dispatch /
+    checkpoint / heartbeat faults."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import obs
+    from repro.checkpoint import (CheckpointManager, latest_step,
+                                  restore_pytree, save_pytree)
+    from repro.core.layout import Layout
+    from repro.core.layoutloop import EvalConfig
+    from repro.core.workloads import init_graph_weights
+    from repro.obs.smoke import build_graph
+    from repro.plan import PlanCache, PlannerOptions, execute_network, \
+        resolve_plan
+    from repro.runtime import HeartbeatRegistry, faults
+    from repro.runtime.retry import IO_POLICY, retry_call
+
+    graph = build_graph(args.graph)
+    layouts = tuple(Layout.parse(s) for s in ("HWC_C32", "HWC_H32"))
+    opts = PlannerOptions(switch_modes=("rir",), layouts=layouts,
+                          parallel_dims=("C", "P", "Q"))
+    cfg = EvalConfig()
+    plans_dir = tmp / "plans"
+
+    # ---- fault-free baseline -------------------------------------------
+    r0 = resolve_plan(graph, cfg, opts, cache=PlanCache(plans_dir),
+                      sleep=_nosleep, policy=IO_POLICY)
+    ws = init_graph_weights(list(graph.layers), seed=0)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=graph.input_shape()), jnp.float32)
+    y0 = np.asarray(execute_network(r0.plan, graph, x, ws))
+
+    # ---- the same work under a seeded fault schedule -------------------
+    # count-mode arithmetic (IO_POLICY has max_attempts=3): the cache read
+    # burns 2 plan_cache.io injections, its third attempt reaches the
+    # artifact parse where plan.load injects -> retries exhausted -> miss ->
+    # tier-1 re-plan, which the deterministic planner makes byte-identical
+    # to the cached plan.  ckpt.write skips the first save (after=1), then
+    # injects 3 = max_attempts times so the second save exhausts its
+    # retries: the kill-between-write-and-rename case.
+    schedule = faults.FaultSchedule(seed=args.seed, sites={
+        "plan.load": faults.SiteSpec(count=1, exc="OSError"),
+        "plan_cache.io": faults.SiteSpec(count=2, exc="OSError"),
+        "exec.dispatch": faults.SiteSpec(count=1, exc="RuntimeError"),
+        "ckpt.write": faults.SiteSpec(count=3, after=1, exc="OSError"),
+        "ckpt.read": faults.SiteSpec(count=1, exc="OSError"),
+        "heartbeat": faults.SiteSpec(count=2, exc="ConnectionError"),
+    })
+    base = _counter_baseline(schedule)
+    with faults.injecting(schedule):
+        r1 = resolve_plan(graph, cfg, opts,
+                          cache=PlanCache(plans_dir, sleep=_nosleep),
+                          sleep=_nosleep, policy=IO_POLICY)
+        y1 = np.asarray(retry_call(
+            lambda: execute_network(r1.plan, graph, x, ws),
+            site="exec.dispatch", policy=IO_POLICY, sleep=_nosleep))
+
+        # checkpointing: save one good step, then a save whose retries are
+        # all injected (previous-good must survive), then a clean save
+        root = tmp / "ckpt"
+        tree1 = {"w": np.arange(8, dtype=np.float32), "b": np.float32(1.0)}
+        tree2 = {"w": np.arange(8, dtype=np.float32) * 2,
+                 "b": np.float32(2.0)}
+        save_pytree(tree1, root / "step_00000001")        # visit 1: skipped
+        try:
+            retry_call(lambda: save_pytree(tree2, root / "step_00000002"),
+                       site="ckpt.write", policy=IO_POLICY, sleep=_nosleep)
+            _fail("second checkpoint save should have exhausted retries")
+        except OSError:
+            pass
+        if latest_step(root) != 1:
+            _fail(f"failed save corrupted the store: latest={latest_step(root)}")
+        got = retry_call(                         # absorbs the ckpt.read fault
+            lambda: restore_pytree({"w": np.zeros(8, np.float32),
+                                    "b": np.float32(0)},
+                                   root / "step_00000001"),
+            site="ckpt.read", policy=IO_POLICY, sleep=_nosleep)
+        if not np.array_equal(np.asarray(got["w"]), tree1["w"]):
+            _fail("previous-good checkpoint no longer restores after "
+                  "kill-between-write-and-rename")
+        save_pytree(tree2, root / "step_00000002")        # injections spent
+        if latest_step(root) != 2:
+            _fail("clean save after exhausted injections did not commit")
+        # restore_latest through the manager (read injections already spent)
+        mgr = CheckpointManager(root, sleep=_nosleep)
+        try:
+            step, tree = mgr.restore_latest({"w": np.zeros(8, np.float32),
+                                             "b": np.float32(0)})
+        finally:
+            mgr.close()
+        if step != 2 or not np.array_equal(np.asarray(tree["w"]),
+                                           tree2["w"]):
+            _fail(f"restore_latest under read fault: step={step}")
+
+        # heartbeats: 2 of 4 packets dropped, none crash, both land in obs
+        reg = HeartbeatRegistry(["host0"])
+        for _ in range(4):
+            reg.beat("host0")
+        if "host0" not in reg.alive():
+            _fail("host0 should be alive after surviving beats")
+
+    _check_schedule(schedule, "network", base)
+    dropped = obs.counter_value("heartbeat.dropped", type="ConnectionError")
+    if dropped != 2:
+        _fail(f"heartbeat.dropped = {dropped} != 2")
+    if r1.tier <= 1 and not np.array_equal(y0, y1):
+        _fail(f"outputs differ at tier {r1.tier_name} — degradation must be "
+              f"bit-exact at tier <= 1")
+    if obs.counter_value("degrade.tier", level=r1.tier_name) < 1:
+        _fail(f"degrade.tier{{level={r1.tier_name}}} counter missing")
+    print(f"[chaos] network phase ok: graph={graph.name} "
+          f"baseline_tier={r0.tier_name} faulted_tier={r1.tier_name} "
+          f"injected={schedule.total_injected()} outputs_identical="
+          f"{bool(np.array_equal(y0, y1))}")
+    return {"graph": graph.name, "baseline_tier": r0.tier_name,
+            "faulted_tier": r1.tier_name,
+            "sites": schedule.summary()}
+
+
+def _serve_phase(args, tmp: pathlib.Path) -> dict:
+    """LM serve smoke: plan resolution + decode loop under injection."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.layoutloop import EvalConfig
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import build_model
+    from repro.plan import (ExecutionPlan, PlanCache, PlannerOptions,
+                            from_arch_config, resolve_plan)
+    from repro.runtime import faults
+    from repro.runtime.retry import IO_POLICY, retry_call
+
+    cfg = get_config(args.arch, smoke=True)
+    prompt_len, gen, B = 8, 4, 2
+    graph = from_arch_config(cfg, seq=prompt_len + gen)
+    eval_cfg = EvalConfig()
+    opts = PlannerOptions(switch_modes=("rir",),
+                          parallel_dims=("C", "P", "Q"))
+    artifact = tmp / "serve-plan.json"
+
+    # fault-free resolve creates the artifact (tier 1, saved back)
+    r0 = resolve_plan(graph, eval_cfg, opts, cache=PlanCache(),
+                      artifact=artifact, sleep=_nosleep, policy=IO_POLICY)
+    if not artifact.exists():
+        _fail("serve plan artifact was not saved back")
+
+    model = build_model(cfg)
+    init_key, data_key = jax.random.split(jax.random.PRNGKey(0))
+    params = model.init(init_key)
+    mesh = make_local_mesh(1)
+    prompts = jax.random.randint(data_key, (B, prompt_len), 0, cfg.vocab)
+    decode = jax.jit(model.decode_step)   # no donation: retry-safe
+
+    def run_decode(cache0, logits0, inject: bool) -> np.ndarray:
+        tokens = jax.numpy.argmax(logits0, axis=-1)
+        cache, out = cache0, [tokens]
+        for _ in range(gen - 1):
+            def step(c=cache, t=tokens):
+                faults.site("exec.dispatch")
+                return decode(params, c, t)
+            if inject:
+                cache, logits = retry_call(step, site="exec.dispatch",
+                                           policy=IO_POLICY, sleep=_nosleep)
+            else:
+                cache, logits = step()
+            tokens = jax.numpy.argmax(logits, axis=-1)
+            out.append(tokens)
+        return np.stack([np.asarray(t) for t in out], axis=1)
+
+    with mesh:
+        if cfg.family in ("ssm", "hybrid"):
+            cache0 = model.init_cache(B, prompt_len + gen)
+            logits0 = None
+            for t in range(prompt_len):            # SSM prefill = scan-in
+                cache0, logits0 = decode(params, cache0, prompts[:, t])
+        else:
+            cache0, logits0 = model.prefill(params, prompts,
+                                            prompt_len + gen)
+        logits0 = jax.block_until_ready(logits0)
+        gen0 = run_decode(cache0, logits0, inject=False)
+
+        # plan.load exhausts all 3 retry attempts -> artifact miss -> tier-1
+        # re-plan -> save-back absorbs one plan.save injection (proving the
+        # temp-file+rename write recovers); decode absorbs one dispatch fault
+        schedule = faults.FaultSchedule(seed=args.seed, sites={
+            "plan.load": faults.SiteSpec(count=3, exc="OSError"),
+            "plan.save": faults.SiteSpec(count=1, exc="OSError"),
+            "exec.dispatch": faults.SiteSpec(count=1, exc="RuntimeError"),
+        })
+        base = _counter_baseline(schedule)
+        with faults.injecting(schedule):
+            r1 = resolve_plan(graph, eval_cfg, opts, cache=PlanCache(),
+                              artifact=artifact, sleep=_nosleep,
+                              policy=IO_POLICY)
+            gen1 = run_decode(cache0, logits0, inject=True)
+
+    _check_schedule(schedule, "serve", base)
+    if r1.tier > 1:
+        _fail(f"serve plan degraded past re-plan: tier={r1.tier_name}")
+    if r1.plan.to_json() != r0.plan.to_json():
+        _fail("re-planned serve plan differs from baseline plan JSON")
+    reloaded = ExecutionPlan.load(artifact)
+    if reloaded.to_json() != r0.plan.to_json():
+        _fail("artifact after faulted save-back differs from baseline plan")
+    if not np.array_equal(gen0, gen1):
+        _fail("decoded tokens differ between fault-free and faulted serve")
+    print(f"[chaos] serve phase ok: arch={cfg.name} tier={r1.tier_name} "
+          f"injected={schedule.total_injected()} tokens_identical=True")
+    return {"arch": cfg.name, "faulted_tier": r1.tier_name,
+            "sites": schedule.summary()}
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.runtime.chaos")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--graph", default="resnet50",
+                    choices=["tiny", "resnet50", "mobv3"])
+    ap.add_argument("--arch", default="llama3p2_3b")
+    ap.add_argument("--skip-serve", action="store_true",
+                    help="network phase only (faster)")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write a JSON fault/degradation report here")
+    args = ap.parse_args(argv)
+
+    from repro import obs
+    from repro.runtime import faults
+
+    report = {"seed": args.seed}
+    with tempfile.TemporaryDirectory(prefix="chaos-") as td:
+        tmp = pathlib.Path(td)
+        obs.reset()
+        obs.enable(str(tmp / "chaos-trace.jsonl"))
+        try:
+            report["network"] = _network_phase(args, tmp)
+            if not args.skip_serve:
+                report["serve"] = _serve_phase(args, tmp)
+        except AssertionError:
+            return 1
+        except faults.STEP_FAULT_TYPES as e:
+            if faults.is_injected(e):
+                print(f"[chaos] FAIL: injected fault escaped as a crash: "
+                      f"{type(e).__name__}: {e}", file=sys.stderr)
+                return 1
+            raise
+        finally:
+            faults.disarm()
+            report["counters"] = {
+                k: v for k, v in sorted(obs.snapshot()["counters"].items())
+                if k.split("{")[0] in
+                ("faults.injected", "retry.attempts", "retry.exhausted",
+                 "degrade.tier", "plan_cache.io_error", "ckpt.write_failed",
+                 "ckpt.restore_failed", "ckpt.restore_fallback",
+                 "heartbeat.dropped")}
+            obs.disable()
+
+    print("[chaos] counters:")
+    for k, v in report["counters"].items():
+        print(f"  {k} = {v:g}")
+    if args.report:
+        pathlib.Path(args.report).write_text(json.dumps(report, indent=2))
+        print(f"[chaos] report -> {args.report}")
+    print(f"[chaos] ok: seed={args.seed}, every scheduled fault injected, "
+          f"none escaped, outputs bit-identical at tier <= replanned")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,6 +5,11 @@ exercised in tests with simulated failures:
 
 * ``HeartbeatRegistry`` — liveness tracking with configurable timeout; the
   supervisor polls it between steps (cheap: one monotonic read per host).
+  Hosts can ``register``/``forget`` after construction, so a re-meshed or
+  recovered host reports alive again; ``sync_to_plan`` reconciles the
+  tracked set to an ``ElasticPlan``'s surviving hosts.  ``beat`` routes
+  through the ``heartbeat`` fault site and *absorbs* injected faults — a
+  dropped liveness packet is a missed beat, never a crash.
 * ``plan_elastic_mesh`` — given the surviving host set, choose the largest
   (data, model) mesh that keeps the model axis intact (TP groups must be
   co-located; DP width shrinks), and report the batch re-sharding plan.
@@ -13,26 +18,27 @@ exercised in tests with simulated failures:
   slower than ``threshold x`` the fleet median for ``patience`` consecutive
   steps are flagged for eviction (the supervisor then treats them as failed —
   eviction beats waiting at scale).
-* ``TrainSupervisor`` — the restart loop: run steps, on failure restore the
-  latest checkpoint onto the re-planned mesh and continue.  The data pipeline
-  is a pure function of (seed, step, shard), so no data state is lost.
+* ``TrainSupervisor`` — the restart loop: run steps, on failure back off
+  (exponential + jitter, shared ``RetryPolicy`` shape), restore the latest
+  checkpoint onto the re-planned mesh and continue.  The restart budget is a
+  sliding window (``restart_window_s``): old restarts age out, so a fleet
+  that hiccups once a day is not killed by a lifetime cap, while a crash
+  loop still exhausts the budget fast.  The data pipeline is a pure function
+  of (seed, step, shard), so no data state is lost.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import random
 import time
-from typing import Callable, Dict, List, Sequence, Set, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro import obs
 
-# Failure types the restart loop treats as node/runtime faults and recovers
-# from: XLA device errors surface as RuntimeError, collective timeouts as
-# TimeoutError, and host/network/filesystem loss as ConnectionError/OSError.
-# Anything else (TypeError, ValueError, assertion failures, ...) is a bug in
-# the step function and must propagate instead of being retried as if a
-# machine had died.
-STEP_FAULT_TYPES = (RuntimeError, TimeoutError, ConnectionError, OSError)
+from . import faults
+from .faults import STEP_FAULT_TYPES  # noqa: F401  (canonical home moved)
+from .retry import RetryPolicy
 
 
 class HeartbeatRegistry:
@@ -42,7 +48,37 @@ class HeartbeatRegistry:
         self.clock = clock
         self._last: Dict[str, float] = {h: clock() for h in hosts}
 
+    def register(self, host: str) -> None:
+        """Start tracking ``host`` (fresh arrival counts as alive now)."""
+        self._last[host] = self.clock()
+
+    def forget(self, host: str) -> None:
+        """Stop tracking ``host`` (evicted / re-meshed away)."""
+        self._last.pop(host, None)
+
+    def hosts(self) -> Set[str]:
+        return set(self._last)
+
+    def sync_to_plan(self, plan: "ElasticPlan") -> None:
+        """Reconcile the tracked set to an elastic re-mesh: hosts the plan
+        dropped are forgotten, hosts it (re)introduced start alive — the
+        recovered-host path that used to be impossible without
+        ``register``."""
+        used = set(plan.hosts_used)
+        for h in self.hosts() - used:
+            self.forget(h)
+        for h in used - self.hosts():
+            self.register(h)
+
     def beat(self, host: str) -> None:
+        try:
+            faults.site("heartbeat")
+        except STEP_FAULT_TYPES as e:
+            # an injected fault here models a lost liveness packet: the beat
+            # is dropped (the host will look dead if drops persist), the
+            # reporting path itself never crashes
+            obs.inc_counter("heartbeat.dropped", type=type(e).__name__)
+            return
         self._last[host] = self.clock()
 
     def alive(self) -> Set[str]:
@@ -104,7 +140,13 @@ class StragglerMonitor:
     def stragglers(self) -> Set[str]:
         if len(self._avg) < 2:
             return set()
-        med = sorted(self._avg.values())[len(self._avg) // 2]
+        vals = sorted(self._avg.values())
+        n = len(vals)
+        # true median: even host counts average the two middle elements —
+        # taking the upper-middle element skews the threshold toward the
+        # slow host, so on a 2-host fleet the slow host could never exceed
+        # 1.5x "the median" (itself) and a genuine straggler went unflagged
+        med = vals[n // 2] if n % 2 else 0.5 * (vals[n // 2 - 1] + vals[n // 2])
         out = set()
         for h, v in self._avg.items():
             if v > self.threshold * med:
@@ -122,13 +164,20 @@ class TrainSupervisor:
 
     run(): executes ``step_fn(step) -> metrics`` until ``total_steps``;
     ``failure_detector()`` is polled between steps; on failure the supervisor
-    calls ``restart_fn(alive_hosts)`` (rebuild mesh + restore checkpoint) and
-    continues from the restored step.
+    backs off (exponential + deterministic jitter per ``backoff``), calls
+    ``restart_fn()`` (rebuild mesh + restore checkpoint) and continues from
+    the restored step.
+
+    The restart budget: with ``restart_window_s=None`` (default) at most
+    ``max_restarts`` over the run's lifetime — the original behaviour.  With
+    a window, only restarts inside the trailing ``restart_window_s`` seconds
+    count, so isolated faults spread over a long run never exhaust the
+    budget but a tight crash loop still does.
 
     With observability on, every recovery lands in counters: ``train.faults``
     labeled by exception type, ``train.restarts`` labeled by cause
-    (``fault`` vs ``detector``) — the data behind any claim about how often
-    the fleet actually falls over.
+    (``fault`` vs ``detector``), plus a ``train.backoff_s`` histogram — the
+    data behind any claim about how often the fleet actually falls over.
     """
     total_steps: int
     step_fn: Callable[[int], Dict]
@@ -138,30 +187,59 @@ class TrainSupervisor:
     failure_detector: Callable[[], bool]
     restart_fn: Callable[[], None]
     max_restarts: int = 8
+    restart_window_s: Optional[float] = None   # None = lifetime budget
+    backoff: RetryPolicy = RetryPolicy(max_attempts=1, base_delay_s=0.05,
+                                       max_delay_s=5.0, jitter=0.25)
+    sleep: Callable[[float], None] = time.sleep
+    clock: Callable[[], float] = time.monotonic
+    seed: int = 0
+    _restart_times: List[float] = dataclasses.field(
+        default_factory=list, init=False, repr=False)
+
+    def _recent_restarts(self) -> int:
+        if self.restart_window_s is None:
+            return len(self._restart_times)
+        now = self.clock()
+        self._restart_times = [t for t in self._restart_times
+                               if now - t <= self.restart_window_s]
+        return len(self._restart_times)
+
+    def _budget_ok(self) -> bool:
+        return self._recent_restarts() < self.max_restarts
+
+    def _recover(self, cause: str, rng: random.Random) -> int:
+        """Back off, restart, note the restart; returns the restored step."""
+        recent = self._recent_restarts()
+        obs.inc_counter("train.restarts", cause=cause)
+        self._restart_times.append(self.clock())
+        delay = self.backoff.delay_s(recent, rng.random())
+        if delay > 0:
+            obs.observe("train.backoff_s", delay)
+            self.sleep(delay)
+        self.restart_fn()
+        return self.restore_fn()
 
     def run(self, start_step: int = 0) -> Tuple[int, List[Dict]]:
         step = start_step
         restarts = 0
         history: List[Dict] = []
+        rng = random.Random(f"{self.seed}:train.restart")
+        self._restart_times = []
         while step < self.total_steps:
             if self.failure_detector():
-                if restarts >= self.max_restarts:
+                if not self._budget_ok():
                     raise RuntimeError("restart budget exhausted")
                 restarts += 1
-                obs.inc_counter("train.restarts", cause="detector")
-                self.restart_fn()
-                step = self.restore_fn()
+                step = self._recover("detector", rng)
                 continue
             try:
                 metrics = self.step_fn(step)
             except STEP_FAULT_TYPES as e:
                 obs.inc_counter("train.faults", type=type(e).__name__)
-                if restarts >= self.max_restarts:
+                if not self._budget_ok():
                     raise
                 restarts += 1
-                obs.inc_counter("train.restarts", cause="fault")
-                self.restart_fn()
-                step = self.restore_fn()
+                step = self._recover("fault", rng)
                 continue
             history.append(metrics)
             step += 1

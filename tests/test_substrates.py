@@ -158,3 +158,152 @@ def test_supervisor_restart_resumes_from_checkpoint():
     # steps 5,6 re-executed after restore from ckpt@5
     assert executed.count(5) == 2 and executed.count(6) == 2
     assert sorted(set(executed)) == list(range(12))
+
+
+def test_heartbeat_register_and_forget():
+    t = [0.0]
+    reg = HeartbeatRegistry(["h0"], timeout_s=10, clock=lambda: t[0])
+    t[0] = 25.0
+    reg.register("h1")               # fresh arrival counts as alive now
+    assert reg.hosts() == {"h0", "h1"}
+    assert reg.alive() == {"h1"}     # h0 aged out, h1 just registered
+    assert reg.dead() == {"h0"}
+    reg.forget("h0")
+    assert reg.hosts() == {"h1"}
+    assert reg.dead() == set()
+    reg.forget("never-registered")   # idempotent, no raise
+
+
+def test_heartbeat_sync_to_plan():
+    t = [0.0]
+    reg = HeartbeatRegistry(["h0", "h1", "h2"], timeout_s=10,
+                            clock=lambda: t[0])
+    remesh = plan_elastic_mesh(["h1", "h2", "h3"], chips_per_host=8,
+                               model_axis=8, old_data_axis=3)
+    reg.sync_to_plan(remesh)
+    assert reg.hosts() == set(remesh.hosts_used)
+    assert "h0" not in reg.hosts()   # dropped host forgotten
+    # recovered/new hosts start alive
+    assert set(remesh.hosts_used) <= reg.alive() | reg.dead()
+    assert reg.dead() == set()
+
+
+def test_elastic_mesh_non_pow2_survivors():
+    # 3 hosts x 8 chips = 24 chips, model_axis=8 -> max_data=3 -> pow2 -> 2
+    plan = plan_elastic_mesh(["h0", "h1", "h2"], chips_per_host=8,
+                             model_axis=8, old_data_axis=3)
+    assert (plan.data, plan.model) == (2, 8)
+    assert plan.chips == 16
+    # 16 chips at 8/host -> exactly 2 hosts consumed, sorted order
+    assert plan.hosts_used == ("h0", "h1")
+    assert plan.dropped_batch_shards == 3 - 2
+
+
+def test_elastic_mesh_exactly_one_model_group():
+    plan = plan_elastic_mesh(["h0"], chips_per_host=8, model_axis=8,
+                             old_data_axis=4)
+    assert (plan.data, plan.model) == (1, 8)
+    assert plan.chips == 8
+    assert plan.hosts_used == ("h0",)
+    assert plan.dropped_batch_shards == 3
+
+
+def test_elastic_mesh_zero_survivors():
+    with pytest.raises(RuntimeError):
+        plan_elastic_mesh([], chips_per_host=8, model_axis=8,
+                          old_data_axis=4)
+    # nonzero hosts but not enough chips for one model group
+    with pytest.raises(RuntimeError):
+        plan_elastic_mesh(["h0"], chips_per_host=4, model_axis=8,
+                          old_data_axis=4)
+
+
+def test_straggler_true_median_two_hosts():
+    # 2-host fleet: median must average both, not take the upper element.
+    # upper-middle "median" would be 4.0 -> threshold 6.0 -> slow host
+    # (4.0) never flagged; true median 2.5 -> threshold 3.75 flags it.
+    mon = StragglerMonitor(threshold=1.5, patience=2, ewma=0.0)
+    for _ in range(2):
+        mon.record("fast", 1.0)
+        mon.record("slow", 4.0)
+        flagged = mon.stragglers()
+    assert flagged == {"slow"}
+
+
+def test_straggler_two_host_tie_flags_nobody():
+    mon = StragglerMonitor(threshold=1.5, patience=1, ewma=0.0)
+    for _ in range(3):
+        mon.record("a", 2.0)
+        mon.record("b", 2.0)
+        assert mon.stragglers() == set()
+
+
+def test_supervisor_backoff_sleeps_between_restarts():
+    t = [0.0]
+    slept = []
+
+    def sleep(d):
+        slept.append(d)
+        t[0] += d
+
+    fails = {"left": 2}
+
+    def step_fn(step):
+        if fails["left"] and step == 3:
+            fails["left"] -= 1
+            raise RuntimeError("boom")
+        return {"step": step}
+
+    from repro.runtime import RetryPolicy
+    sup = TrainSupervisor(
+        total_steps=6, step_fn=step_fn, save_every=100,
+        save_fn=lambda s: None, restore_fn=lambda: 3,
+        failure_detector=lambda: False, restart_fn=lambda: None,
+        backoff=RetryPolicy(max_attempts=1, base_delay_s=0.1,
+                            max_delay_s=5.0, jitter=0.0),
+        sleep=sleep, clock=lambda: t[0])
+    restarts, history = sup.run()
+    assert restarts == 2
+    # exponential: 2nd restart backs off 2x the 1st (jitter=0)
+    assert slept == [0.1, 0.2]
+    assert len(history) == 6
+
+
+def test_supervisor_restart_window_expires_old_restarts():
+    t = [0.0]
+
+    def clock():
+        return t[0]
+
+    fails = {"n": 0}
+
+    def step_fn(step):
+        t[0] += 10.0                  # each step takes 10s of fake time
+        if step == 2 and fails["n"] < 4:
+            fails["n"] += 1
+            raise RuntimeError("flaky step")
+        return {"step": step}
+
+    from repro.runtime import RetryPolicy
+    common = dict(
+        total_steps=4, step_fn=step_fn, save_every=100,
+        save_fn=lambda s: None, restore_fn=lambda: 2,
+        failure_detector=lambda: False, restart_fn=lambda: None,
+        max_restarts=2,
+        backoff=RetryPolicy(max_attempts=1, base_delay_s=0.0, jitter=0.0),
+        sleep=lambda d: None, clock=clock)
+
+    # lifetime budget (no window): 4 faults > 2 restarts -> exhausted
+    fails["n"] = 0
+    t[0] = 0.0
+    with pytest.raises(RuntimeError, match="flaky step"):
+        TrainSupervisor(**common).run()
+
+    # sliding window shorter than the inter-fault gap: old restarts age
+    # out, so the same fault pattern survives to completion
+    fails["n"] = 0
+    t[0] = 0.0
+    restarts, history = TrainSupervisor(
+        **dict(common, restart_window_s=5.0)).run()
+    assert restarts == 4
+    assert len(history) == 4

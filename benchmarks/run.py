@@ -14,7 +14,8 @@ import traceback
 def main() -> None:
     from . import (fig2_layout_gap, fig4_mappings, fig10_gemm_util,
                    fig12_fixed_dataflow, fig13_layoutloop, fig14_area,
-                   fig_plan_switching, kernels_bench, plan_speed, roofline)
+                   fig_plan_switching, kernels_bench, plan_speed, roofline,
+                   serve_bench)
     suites = [
         ("fig2 (layout gap)", fig2_layout_gap.main),
         ("fig4 (mapping table)", fig4_mappings.main),
@@ -24,6 +25,7 @@ def main() -> None:
         ("fig14/tab5 (area & power)", fig14_area.main),
         ("fig_plan (network-planned switching)", fig_plan_switching.main),
         ("plan_speed (lattice vs scalar planning)", plan_speed.main),
+        ("serve (continuous batching vs sequential)", serve_bench.main),
         ("kernels (microbench)", kernels_bench.main),
         ("roofline (dry-run terms)", roofline.main),
     ]

@@ -1,69 +1,50 @@
-"""Batched serving example: continuous decode over a request batch with
-per-request lengths (prefill + decode with KV caches; SSM archs use their
-recurrent state instead — same API).
+"""Batched LM serving example through the ``repro.api`` serve engine.
 
     PYTHONPATH=src python examples/serve_lm.py [--arch zamba2_2p7b]
+
+Submits more requests than one batch holds to a continuous-batching
+``ServeEngine``: requests queue at admission, worker threads assemble
+dynamic batches up to ``--batch``, and each request gets back only its own
+generated tokens — bit-identical to being served alone (padding and batch
+composition never leak across requests).  SSM archs run the same API;
+their prefill is a recurrent scan-in instead of attention prefill.
 """
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCH_IDS, get_config
-from repro.launch.mesh import make_local_mesh
-from repro.models import build_model
+from repro.api import ServeConfig, ServeEngine
+from repro.configs import ARCH_IDS
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="zamba2_2p7b", choices=ARCH_IDS)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--gen", type=int, default=24)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, smoke=True)
-    model = build_model(cfg)
-    mesh = make_local_mesh()
-    params = model.init(jax.random.PRNGKey(0))
-    B = args.batch
-    max_seq = 16 + args.gen
-
-    # ragged request batch: different prompt lengths, left-aligned
+    config = ServeConfig(arch=args.arch, smoke=True, max_batch=args.batch,
+                         prompt_len=args.prompt_len, gen=args.gen)
     rng = np.random.default_rng(0)
-    prompt_lens = rng.integers(4, 16, size=B)
-    prompts = [rng.integers(0, cfg.vocab, size=n) for n in prompt_lens]
-    print(f"arch={cfg.name}: {B} requests, prompt lens {prompt_lens.tolist()}")
-
-    decode = jax.jit(model.decode_step, donate_argnums=(1,))
-    cache = model.init_cache(B, max_seq)
-    generated = [[] for _ in range(B)]
-    t0 = time.time()
-    with mesh:
-        # feed prompts token-by-token (works uniformly for attention + SSM);
-        # shorter requests enter decode earlier (continuous batching)
-        max_prompt = int(prompt_lens.max())
-        tok = jnp.zeros((B,), jnp.int32)
-        for t in range(max_prompt + args.gen):
-            feed = []
-            for b in range(B):
-                if t < prompt_lens[b]:
-                    feed.append(int(prompts[b][t]))       # still prefilling
-                else:
-                    feed.append(int(tok[b]))              # decoding
-            cache, logits = decode(params, cache, jnp.asarray(feed))
-            tok = jnp.argmax(logits, -1)
-            for b in range(B):
-                if t >= prompt_lens[b]:
-                    generated[b].append(int(tok[b]))
-        jax.block_until_ready(tok)
-    dt = time.time() - t0
-    steps = max_prompt + args.gen
-    print(f"{steps} decode steps in {dt:.2f}s "
-          f"({dt/steps*1e3:.1f} ms/step, batch {B})")
-    for b in range(min(B, 3)):
-        print(f"  req{b}: {generated[b][:10]}")
+    with ServeEngine(config) as eng:
+        from repro.configs import get_config
+        vocab = get_config(args.arch, smoke=True).vocab
+        prompts = [rng.integers(0, vocab, size=args.prompt_len)
+                   .astype(np.int32) for _ in range(args.requests)]
+        print(f"arch={args.arch}: {args.requests} requests, "
+              f"batch ceiling {args.batch}")
+        t0 = time.time()
+        outs = eng.serve(prompts)
+        dt = time.time() - t0
+    total_tokens = args.requests * args.gen
+    print(f"{total_tokens} tokens in {dt:.2f}s "
+          f"({dt / total_tokens * 1e3:.1f} ms/token at batch {args.batch})")
+    for b in range(min(args.requests, 3)):
+        print(f"  req{b}: {outs[b][:10].tolist()}")
 
 
 if __name__ == "__main__":

@@ -1,21 +1,24 @@
-"""Batched serving driver: prefill a prompt batch, decode with KV caches.
+"""Serving CLI: a thin front-end over ``repro.api.ServeEngine``.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3p2_3b --smoke \
         --batch 4 --prompt-len 32 --gen 16 --plan plan.json
+    PYTHONPATH=src python -m repro.launch.serve --graph tiny --batch 4 \
+        --workers 2
 
+All knobs live on ``repro.api.ServeConfig`` (this module only parses argv
+and prints a summary); the engine owns plan resolution, the bounded
+admission queue, dynamic batch assembly and background tier upgrades.
 Observability: console output goes through the ``repro.obs`` structured
 logger (``--log-level`` / ``REPRO_LOG``); ``REPRO_TRACE=out.jsonl`` records
-plan/prefill/decode spans and per-request latency histograms
-(``serve.prefill_ms``, ``serve.decode_ms_per_token``) for
+``serve.plan``/``serve.batch`` spans and the queue/latency histograms
+(``serve.batch_size``, ``serve.time_in_queue_ms``, ``serve.ttft_ms``,
+``serve.prefill_ms``, ``serve.decode_ms_per_token``) for
 ``python -m repro.obs.report``.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
@@ -24,142 +27,72 @@ log = obs.get_logger("serve")
 
 
 def _plan_for(cfg, args):
-    """Resolve the network execution plan for this arch — never crash.
+    """Deprecated shim — kept so pre-facade callers keep working.
 
-    Routes through the degradation ladder (``repro.plan.resolve_plan``): the
-    ``--plan`` artifact seeds the cache (tier 0, a stale/corrupt artifact is
-    quarantined and missed), a miss re-plans under retry (tier 1, saved back
-    to the artifact), and planner failure degrades to greedy then to a fixed
-    layout instead of taking serving down.  ``--plan-deadline`` bounds the
-    whole resolution.  Returns the ``ResolvedPlan`` (plan + tier).
+    The engine resolves plans itself now; import ``resolve_plan`` from
+    ``repro.api`` instead.  Delegates to the same ladder with the same
+    options and returns the ``ResolvedPlan``.
     """
-    from repro.core.layoutloop import EvalConfig
-    from repro.plan import (PlanCache, PlannerOptions, from_arch_config,
-                            resolve_plan)
+    from repro import api
+
+    api.warn_deprecated("repro.launch.serve._plan_for", "resolve_plan")
+    from repro.plan import PlannerOptions, from_arch_config
 
     graph = from_arch_config(cfg, seq=args.prompt_len + args.gen)
-    eval_cfg = EvalConfig()
     opts = PlannerOptions(switch_modes=("rir",), parallel_dims=("C", "P", "Q"))
-    resolved = resolve_plan(graph, eval_cfg, opts, cache=PlanCache(),
-                            artifact=args.plan,
+    return api.resolve_plan(graph, api.EvalConfig(), opts=opts,
+                            cache=api.PlanCache(), artifact=args.plan,
                             deadline_s=args.plan_deadline)
-    plan = resolved.plan
-    if resolved.tier == 1:
-        log.info("planned %d layers -> %s", len(plan), args.plan)
-    elif resolved.tier > 1:
-        log.warning("degraded plan tier=%s (planner unavailable)",
-                    resolved.tier_name)
-    log.info("%s", plan.summary())
-    return resolved
 
 
 def _decode_block_hints(plan):
-    """Distinct kernel (block_m, block_k) shapes the plan's steps ask for.
-
-    The decode path's attention/MLP matmuls run through the model's own
-    jitted step today, not the plan executor; these hints are *advisory* —
-    logged so an operator can see what block shapes a plan-driven decode
-    would use — and double as the single consumption point that keeps the
-    resolved plan threaded through ``main()``.
-    """
+    """Distinct kernel (block_m, block_k) shapes the plan's steps ask for —
+    advisory, logged so an operator can see what a plan-driven decode
+    would use."""
     from repro.plan import step_kernel_blocks
 
     return sorted({step_kernel_blocks(s) for s in plan.steps})
 
 
 def main() -> None:
+    from repro.api import ServeConfig, ServeEngine
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3p2_3b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--model-axis", type=int, default=1)
-    ap.add_argument("--plan", default=None, metavar="PATH",
-                    help="execution-plan artifact: load it if it exists, "
-                    "else network-plan this arch and save it there")
-    ap.add_argument("--plan-deadline", type=float, default=30.0,
-                    help="seconds the plan resolution may spend before "
-                    "degrading straight to a fixed-layout plan")
-    ap.add_argument("--log-level", default=None,
-                    choices=["debug", "info", "warning", "error"],
-                    help="console log threshold (default: REPRO_LOG or info)")
+    ServeConfig.add_args(ap)
     args = ap.parse_args()
 
     obs.configure_from_env()          # REPRO_TRACE=path enables tracing
-    if args.log_level:
-        obs.set_level(args.log_level)
+    config = ServeConfig.from_args(args)
 
-    from repro.configs import get_config
-    from repro.launch.mesh import make_local_mesh
-    from repro.models import build_model
+    with ServeEngine(config) as eng:
+        resolved = eng.resolved
+        if resolved is not None:
+            hints = _decode_block_hints(resolved.plan)
+            log.info("plan %s tier=%s; decode kernel block hints %s",
+                     resolved.plan.plan_id, resolved.tier_name, hints)
+        if config.arch is not None:
+            import jax
 
-    cfg = get_config(args.arch, smoke=args.smoke)
-    plan_attrs = {}
-    if args.plan:
-        with obs.span("serve.plan", {"arch": cfg.name}):
-            resolved = _plan_for(cfg, args)
-        hints = _decode_block_hints(resolved.plan)
-        log.info("plan %s tier=%s; decode kernel block hints %s",
-                 resolved.plan.plan_id, resolved.tier_name, hints)
-        plan_attrs = {"plan_id": resolved.plan.plan_id,
-                      "plan_tier": resolved.tier_name}
-    model = build_model(cfg)
-    mesh = make_local_mesh(args.model_axis)
-    # independent streams: reusing one key for params AND data would
-    # correlate the prompt draw with the init draw
-    init_key, data_key = jax.random.split(jax.random.PRNGKey(0))
-    params = model.init(init_key)
-    max_seq = args.prompt_len + args.gen
+            from repro.configs import get_config
 
-    B = args.batch
-    prompts = jax.random.randint(data_key, (B, args.prompt_len), 0, cfg.vocab)
-
-    decode = jax.jit(model.decode_step, donate_argnums=(1,))
-    traced = obs.enabled()
-    with mesh:
-        with obs.span("serve.prefill", {"arch": cfg.name, "batch": B,
-                                        "prompt_len": args.prompt_len,
-                                        **plan_attrs}
-                      if traced else None):
-            t0 = time.perf_counter()
-            if cfg.family in ("ssm", "hybrid"):
-                cache = model.init_cache(B, max_seq)
-                logits = None
-                for t in range(args.prompt_len):  # SSM prefill = scan-in
-                    cache, logits = decode(params, cache, prompts[:, t])
-            else:
-                cache, logits = model.prefill(params, prompts, max_seq)
-            # async dispatch: without the fence this measures Python time
-            logits = jax.block_until_ready(logits)
-            t_prefill = time.perf_counter() - t0
-        obs.observe("serve.prefill_ms", t_prefill * 1e3)
-        tokens = jnp.argmax(logits, axis=-1)
-        out = [tokens]
-        t0 = time.perf_counter()
-        with obs.span("serve.decode", {"arch": cfg.name, "batch": B,
-                                       "gen": args.gen, **plan_attrs}
-                      if traced else None):
-            for _ in range(args.gen - 1):
-                if traced:
-                    tok_t0 = obs.now_us()
-                cache, logits = decode(params, cache, tokens)
-                tokens = jnp.argmax(logits, axis=-1)
-                out.append(tokens)
-                if traced:
-                    # per-token histogram sample: sync each step (observer
-                    # cost; untraced serving keeps the pipelined dispatch)
-                    tokens = jax.block_until_ready(tokens)
-                    obs.observe("serve.decode_ms_per_token",
-                                (obs.now_us() - tok_t0) / 1e3)
-            jax.block_until_ready(tokens)
-        t_decode = time.perf_counter() - t0
-    gen = np.stack([np.asarray(t) for t in out], axis=1)
-    log.info("arch=%s batch=%d prompt=%d gen=%d",
-             cfg.name, B, args.prompt_len, args.gen)
-    log.info("prefill %.1f ms; decode %.1f ms/token",
-             t_prefill * 1e3, t_decode * 1e3 / max(1, args.gen - 1))
-    log.info("sample tokens: %s", gen[0, :12].tolist())
+            cfg = get_config(config.arch, smoke=config.smoke)
+            _, data_key = jax.random.split(jax.random.PRNGKey(config.seed))
+            prompts = jax.random.randint(
+                data_key, (config.max_batch, config.prompt_len), 0, cfg.vocab)
+            outs = eng.serve([np.asarray(prompts[i])
+                              for i in range(config.max_batch)])
+            log.info("arch=%s batch=%d prompt=%d gen=%d",
+                     cfg.name, config.max_batch, config.prompt_len,
+                     config.gen)
+            log.info("sample tokens: %s", outs[0][:12].tolist())
+        else:
+            rng = np.random.default_rng(config.seed)
+            samples = [rng.standard_normal(eng.sample_shape)
+                       .astype(np.float32) for _ in range(config.max_batch)]
+            outs = eng.serve(samples)
+            log.info("graph=%s batch=%d out=%s checksum=%.6f",
+                     config.graph, config.max_batch, outs[0].shape,
+                     float(np.sum(np.stack(outs))))
 
 
 if __name__ == "__main__":

@@ -11,7 +11,14 @@ layer of the stack:
 * the plan executors — per-step wall-clock spans bracketed by
   ``jax.block_until_ready``, recorded next to the step's modeled
   cycles/energy from the plan artifact,
-* ``launch.serve`` — per-request prefill/decode latency histograms,
+* ``serve.ServeEngine`` — the continuous-batching serving loop:
+  ``serve.queue_depth`` gauge, ``serve.batch_size`` /
+  ``serve.time_in_queue_ms`` / ``serve.ttft_ms`` / ``serve.e2e_ms``
+  histograms, ``serve.requests`` / ``serve.rejected{reason=}`` /
+  ``serve.batches`` / ``serve.plan_upgrade`` counters, and a
+  ``serve.batch`` span carrying ``plan_id``/``plan_tier``/``plan_reason``
+  (plus the per-batch prefill/decode latency histograms the LM path
+  always recorded),
 * ``TrainSupervisor`` — fault/retry counters by fault type plus restart
   causes and a ``train.backoff_s`` histogram,
 * the robustness layer — ``faults.injected{site=}`` (fault injection),

@@ -24,8 +24,8 @@ import numpy as np
 
 
 def build_graph(name: str):
+    from repro.api import from_layers, mobilenet_v3_graph, resnet50_graph
     from repro.core.dataflow import ConvWorkload
-    from repro.plan import from_layers, mobilenet_v3_graph, resnet50_graph
     if name == "resnet50":
         return resnet50_graph()
     if name == "mobv3":
@@ -49,12 +49,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     import jax.numpy as jnp
 
     from repro import obs
-    from repro.core.layout import Layout
-    from repro.core.layoutloop import EvalConfig
+    from repro.api import (EvalConfig, Layout, PlanCache, PlannerOptions,
+                           execute_network, plan_network)
     from repro.core.workloads import init_graph_weights
     from repro.obs.report import build_report, format_report
-    from repro.plan import (NetworkPlanner, PlanCache, PlannerOptions,
-                            execute_network)
 
     graph = build_graph(args.graph)
     layouts = tuple(Layout.parse(s) for s in ("HWC_C32", "HWC_H32"))
@@ -66,11 +64,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     obs.enable(args.out)
     cache = PlanCache()
     plan = cache.get_or_plan(
-        graph, cfg, lambda g, c: NetworkPlanner(g, c, opts).plan(),
+        graph, cfg, lambda g, c: plan_network(g, c, opts=opts),
         extra_key=opts.key())
     # a second lookup exercises the hit counter
     assert cache.get_or_plan(
-        graph, cfg, lambda g, c: NetworkPlanner(g, c, opts).plan(),
+        graph, cfg, lambda g, c: plan_network(g, c, opts=opts),
         extra_key=opts.key()) is plan
 
     ws = init_graph_weights(list(graph.layers), seed=0)

@@ -14,7 +14,7 @@ from .plan import (ExecutionPlan, JoinSpec, PlanCache, PlanStep, config_key,
                    layout_block_perm)
 from .search import (NetworkPlanner, PlannerOptions, brute_force_plan,
                      fixed_plan, greedy_plan, plan_network)
-from .fallback import TIER_NAMES, ResolvedPlan, resolve_plan
+from .fallback import TIER_NAMES, ResolvedPlan, resolve_plan, upgrade_plan
 from .executor import (PlanError, PreparedNetwork, PreparedPlan,
                        adapt_activation, execute_network,
                        execute_network_reference, execute_plan,
@@ -29,7 +29,7 @@ __all__ = [
     "layout_block_perm",
     "NetworkPlanner", "PlannerOptions", "plan_network", "greedy_plan",
     "brute_force_plan", "fixed_plan",
-    "TIER_NAMES", "ResolvedPlan", "resolve_plan",
+    "TIER_NAMES", "ResolvedPlan", "resolve_plan", "upgrade_plan",
     "PlanError", "PreparedPlan", "prepare_plan", "execute_plan",
     "execute_plan_reference", "permute_weight_blocks",
     "PreparedNetwork", "prepare_network", "execute_network",

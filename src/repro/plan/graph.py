@@ -69,6 +69,22 @@ class LayerGraph:
         h.update(repr(tuple(sorted(self.skip_edges))).encode())
         return h.hexdigest()
 
+    def with_batch(self, batch: int) -> "LayerGraph":
+        """The same network at batch extent ``batch`` (every layer's N).
+
+        Serving plans the graph at the engine's maximum batch size so the
+        plan tile's batch extent bounds dynamic batch assembly; the batch is
+        part of the workload dims, so the rebatched graph hashes (and is
+        planned and cached) separately from the original.
+        """
+        if batch < 1:
+            raise ValueError(f"batch {batch} < 1")
+        if all(wl.N == batch for wl in self.layers):
+            return self
+        return dataclasses.replace(
+            self, layers=tuple(dataclasses.replace(wl, N=batch)
+                               for wl in self.layers))
+
 
 def from_layers(layers: Sequence[ConvWorkload], name: str = "chain",
                 skip_edges: Sequence[Tuple[int, int]] = ()) -> LayerGraph:

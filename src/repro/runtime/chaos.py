@@ -4,10 +4,11 @@
         [--graph tiny|resnet50|mobv3] [--arch llama3p2_3b]
         [--skip-serve] [--report out.json]
 
-Runs a planned network execution and an LM serve smoke under a seeded
-``FaultSchedule`` covering every fault site (plan load/save, plan-cache I/O,
-kernel dispatch, checkpoint write/read, heartbeat) and asserts the three
-robustness claims the tentpole makes:
+Runs a planned network execution, a continuous-batching engine serve and an
+LM serve smoke under a seeded ``FaultSchedule`` covering every fault site
+(plan load/save, plan-cache I/O, kernel dispatch, checkpoint write/read,
+heartbeat, serve-queue admission) and asserts the three robustness claims
+the tentpole makes:
 
 1. **no injected fault escapes** — every scheduled fault fires
    (``schedule.all_fired()``, counter-verified against
@@ -283,6 +284,67 @@ def _serve_phase(args, tmp: pathlib.Path) -> dict:
             "sites": schedule.summary()}
 
 
+def _engine_phase(args, tmp: pathlib.Path) -> dict:
+    """Continuous-batching engine under ``serve.queue`` admission faults.
+
+    Injected admission faults must surface as typed ``QueueFullError``
+    backpressure rejections — never an unhandled escape, never a deadlock —
+    and the retried requests' outputs must stay bit-identical to a
+    fault-free sequential serve."""
+    import numpy as np
+
+    from repro import obs
+    from repro.api import PlanCache, QueueFullError, ServeConfig, ServeEngine
+    from repro.runtime import faults
+
+    cache = PlanCache(tmp / "engine-plans")
+    cfg = ServeConfig(graph="tiny", max_batch=4, workers=2,
+                      queue_capacity=16)
+    rng = np.random.default_rng(args.seed)
+    schedule = faults.FaultSchedule(seed=args.seed, sites={
+        "serve.queue": faults.SiteSpec(count=2, exc="RuntimeError"),
+    })
+    base = _counter_baseline(schedule)
+    rej0 = obs.counter_value("serve.rejected", reason="fault")
+    with ServeEngine(cfg, cache=cache, sleep=_nosleep) as eng:
+        samples = [rng.standard_normal(eng.sample_shape).astype(np.float32)
+                   for _ in range(9)]
+        with faults.injecting(schedule):
+            # engine.serve absorbs QueueFullError rejections by resubmitting;
+            # the two injected admission faults land on the first submits
+            outs = eng.serve(samples)
+            try:
+                faults.site("serve.queue")   # spent schedule: admission clean
+            except faults.STEP_FAULT_TYPES:
+                _fail("engine: serve.queue fired past its scheduled count")
+    _check_schedule(schedule, "engine", base)
+    rejected = obs.counter_value("serve.rejected", reason="fault") - rej0
+    if rejected != 2:
+        _fail(f"engine: serve.rejected{{reason=fault}} grew {rejected} != 2")
+
+    seq_cfg = ServeConfig(graph="tiny", max_batch=4, workers=1,
+                          assemble_max=1, queue_capacity=16)
+    with ServeEngine(seq_cfg, cache=cache, sleep=_nosleep) as seq:
+        if seq.resolved.tier != 0:
+            _fail(f"engine: shared cache missed (tier={seq.resolved.tier_name})")
+        ref = seq.serve(samples)
+        try:
+            seq.submit(np.zeros((3,), np.float32))
+            _fail("engine: bad-shape submit should raise")
+        except QueueFullError:
+            _fail("engine: bad shape misreported as backpressure")
+        except Exception:
+            pass   # typed ServeError, the correct rejection
+    for i, (a, b) in enumerate(zip(outs, ref)):
+        if not np.array_equal(a, b):
+            _fail(f"engine: request {i} differs from sequential serve")
+    print(f"[chaos] engine phase ok: {len(samples)} requests, "
+          f"{int(rejected)} typed admission rejections, "
+          f"batched == sequential bit-identical")
+    return {"graph": "tiny", "rejected": int(rejected),
+            "sites": schedule.summary()}
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.runtime.chaos")
     ap.add_argument("--seed", type=int, default=0)
@@ -305,6 +367,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         obs.enable(str(tmp / "chaos-trace.jsonl"))
         try:
             report["network"] = _network_phase(args, tmp)
+            report["engine"] = _engine_phase(args, tmp)
             if not args.skip_serve:
                 report["serve"] = _serve_phase(args, tmp)
         except AssertionError:
@@ -323,7 +386,7 @@ def main(argv: Optional[List[str]] = None) -> int:
                 ("faults.injected", "retry.attempts", "retry.exhausted",
                  "degrade.tier", "plan_cache.io_error", "ckpt.write_failed",
                  "ckpt.restore_failed", "ckpt.restore_fallback",
-                 "heartbeat.dropped")}
+                 "heartbeat.dropped", "serve.rejected")}
             obs.disable()
 
     print("[chaos] counters:")

@@ -22,6 +22,9 @@ site                fires inside
 ``plan.save``       ``ExecutionPlan.save`` — between the temp-file write and
                     the atomic rename (the kill-mid-write point)
 ``plan_cache.io``   ``PlanCache`` disk reads (``get``) and writes (``put``)
+``plan.replan``     the tier-1 full re-plan inside ``resolve_plan`` /
+                    ``upgrade_plan``, before the planner runs — "the
+                    planner fleet is down" for the degradation ladder
 ``exec.dispatch``   the plan executors, once per plan step, immediately
                     before the kernel dispatch (``PreparedNetwork.__call__``
                     and ``PreparedPlan.__call__``)
@@ -32,6 +35,10 @@ site                fires inside
 ``heartbeat``       ``HeartbeatRegistry.beat`` — an injected fault here is a
                     *dropped* liveness packet (the registry absorbs it; the
                     host simply fails to report alive)
+``serve.queue``     ``ServeEngine.submit`` — request admission; an injected
+                    fault here surfaces as a typed ``QueueFullError``
+                    backpressure rejection (reason ``"fault"``), never an
+                    unhandled escape: clients back off and resubmit
 =================== =========================================================
 
 Schedule format

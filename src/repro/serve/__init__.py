@@ -1,0 +1,18 @@
+"""repro.serve — continuous-batching request serving for planned networks.
+
+The request-level layer above the plan stack: a bounded admission queue,
+dynamic batch assembly up to the plan tile's batch extent (pad-and-mask,
+bit-identical to sequential execution), a warm ``PlanCache`` tier shared
+across workers, and background re-planning that upgrades degraded-tier
+plans to tier 1 without blocking the serving loop.  ``ServeConfig`` is the
+single deployment description shared by the CLI (``repro.launch.serve``),
+the engine, the benchmark (``benchmarks.serve_bench``) and the tests.
+
+Import from ``repro.api`` in application code; this package is the
+implementation.
+"""
+from .config import DEFAULT_LAYOUTS, GRAPH_NAMES, ServeConfig
+from .engine import QueueFullError, ServeEngine, ServeError, ServeTicket
+
+__all__ = ["ServeConfig", "ServeEngine", "ServeTicket", "ServeError",
+           "QueueFullError", "GRAPH_NAMES", "DEFAULT_LAYOUTS"]

@@ -1,6 +1,6 @@
 """Fig. plan — network-planned dataflow/layout switching.
 
-Compares five schedules on ResNet-50 / MobileNet-V3 / BERT, on two hardware
+Compares six schedules on ResNet-50 / MobileNet-V3 / BERT, on two hardware
 classes (boundary switches via off-chip round trip only, vs RIR + off-chip):
 
   * fixed     — one layout at every boundary, no switching (SIGMA-style)
@@ -12,14 +12,21 @@ classes (boundary switches via off-chip round trip only, vs RIR + off-chip):
                 the PR 4 cost model
   * pipelined — tiled + the double-buffer axis: ping-pong candidates trade
                 half the buffer for per-tile overlap of refetch with compute
+                (the PR 5 cost model, uniform capacity/2 split)
+  * fused     — pipelined + the per-tensor buffer allocation (each of
+                iActs/weights/oActs single- or double-buffered) and
+                cross-layer fusion as DP states: a fused edge's boundary
+                tensor never round-trips DRAM
 
 The planned schedule must dominate greedy on total cycles, the tiled
-schedule must dominate planned, and the pipelined schedule must dominate
-tiled on EVERY (net, hardware) pair (each search space contains the
-previous one) — all asserted.  With RIR the gap between greedy and planned
-collapses because switching is free — the paper's headline claim, now
-measured at network scale; the pipelined row additionally shows the stall
-cycles the ping-pong Nest buffers hide "under the hood" of compute.
+schedule must dominate planned, the pipelined schedule must dominate
+tiled, and the fused schedule must dominate pipelined on EVERY (net,
+hardware) pair (each search space contains the previous one) — all
+asserted, plus a >= 1.2x fused-vs-pipelined cycle win on at least one
+net.  With RIR the gap between greedy and planned collapses because
+switching is free — the paper's headline claim, now measured at network
+scale; the pipelined row additionally shows the stall cycles the
+ping-pong Nest buffers hide "under the hood" of compute.
 
 Besides the *modeled* cycle totals, every schedule is also **executed**
 end-to-end through ``repro.plan.execute_network`` — convolutions lowered to
@@ -49,7 +56,10 @@ HARDWARE = {
     "rir": ("rir", "offchip"),
 }
 FIXED_LAYOUT = Layout.parse("HWC_C32")
-SCHEDULES = ("fixed", "greedy", "planned", "tiled", "pipelined")
+SCHEDULES = ("fixed", "greedy", "planned", "tiled", "pipelined", "fused")
+# acceptance floor: the fused+per-tensor search must buy at least this
+# modeled-cycle factor over the PR 5 pipelined schedule on SOME net
+FUSED_MIN_WIN = 1.2
 
 
 def edp(plan) -> float:
@@ -68,16 +78,22 @@ def run(quick: bool = True):
         for hw_name, modes in HARDWARE.items():
             opts = PlannerOptions(switch_modes=modes,
                                   parallel_dims=("C", "P", "Q"),
-                                  search_tiles=False, double_buffer=False)
+                                  search_tiles=False, double_buffer=False,
+                                  per_tensor_buffers=False,
+                                  fuse_layers=False)
             planner = NetworkPlanner(graph, cfg, opts)
             tiled_opts = dataclasses.replace(opts, search_tiles=True)
             pipe_opts = dataclasses.replace(tiled_opts, double_buffer=True)
+            fused_opts = dataclasses.replace(pipe_opts,
+                                             per_tensor_buffers=True,
+                                             fuse_layers=True)
             plans = {
                 "fixed": planner.fixed(FIXED_LAYOUT),
                 "greedy": planner.greedy(),
                 "planned": planner.plan(),
                 "tiled": NetworkPlanner(graph, cfg, tiled_opts).plan(),
                 "pipelined": NetworkPlanner(graph, cfg, pipe_opts).plan(),
+                "fused": NetworkPlanner(graph, cfg, fused_opts).plan(),
             }
             assert plans["planned"].total_cycles <= \
                 plans["greedy"].total_cycles, (
@@ -96,6 +112,13 @@ def run(quick: bool = True):
                 plans["tiled"].total_cycles, (
                     net_name, hw_name, plans["pipelined"].total_cycles,
                     plans["tiled"].total_cycles)
+            # acceptance: fused + per-tensor plans are never worse than the
+            # PR 5 pipelined plans on any (net, hardware) pair — the
+            # uniform-split unfused candidates stay in the search space
+            assert plans["fused"].total_cycles <= \
+                plans["pipelined"].total_cycles, (
+                    net_name, hw_name, plans["fused"].total_cycles,
+                    plans["pipelined"].total_cycles)
             for sched, plan in plans.items():
                 table[(net_name, hw_name, sched)] = plan
     # acceptance: the tile axis must buy a real EDP win somewhere
@@ -107,6 +130,13 @@ def run(quick: bool = True):
                < table[(n, h, "tiled")].total_cycles
                for n in nets for h in HARDWARE), \
         "double buffering produced no strict cycle improvement anywhere"
+    # acceptance: per-tensor allocation + fusion must buy >= FUSED_MIN_WIN
+    # modeled cycles over the PR 5 pipelined schedule on at least one net
+    best_win = max(table[(n, h, "pipelined")].total_cycles
+                   / table[(n, h, "fused")].total_cycles
+                   for n in nets for h in HARDWARE)
+    assert best_win >= FUSED_MIN_WIN, \
+        f"fused schedule's best win {best_win:.3f}x < {FUSED_MIN_WIN}x"
     return nets, table
 
 
@@ -149,6 +179,8 @@ def main(quick: bool = True):
     rows = []
     for (net, hw, sched), plan in table.items():
         fixed = table[(net, hw, "fixed")].total_cycles
+        fused_edges = sum(1 for s in plan.steps if s.fused_with is not None)
+        per_tensor = sum(1 for s in plan.steps if s.buffer_alloc)
         rows.append((
             f"fig_plan.{net}.{hw}.{sched}", plan.total_cycles,
             f"cycles;speedup_vs_fixed={fixed / plan.total_cycles:.3f};"
@@ -156,7 +188,8 @@ def main(quick: bool = True):
             f"transition_cycles={plan.transition_cycles:.3g};"
             f"edp={edp(plan):.4g};"
             f"tiled_steps={sum(1 for s in plan.steps if s.tiles)};"
-            f"db_steps={sum(1 for s in plan.steps if s.double_buffer)}"))
+            f"db_steps={sum(1 for s in plan.steps if s.double_buffer)};"
+            f"fused_edges={fused_edges};per_tensor_steps={per_tensor}"))
     executed = run_executed(nets, table, quick)
     for (net, hw, sched), (us, err) in executed.items():
         rows.append((
@@ -172,10 +205,13 @@ def main(quick: bool = True):
             edp(table[(net, "rir", "tiled")])
         db_gain = table[(net, "rir", "tiled")].total_cycles / \
             table[(net, "rir", "pipelined")].total_cycles
+        fuse_gain = table[(net, "rir", "pipelined")].total_cycles / \
+            table[(net, "rir", "fused")].total_cycles
         print(f"# {net}: greedy/planned (offchip) = {g_off / p_off:.3f}x; "
               f"planned offchip/rir = {p_off / p_rir:.3f}x; tiled EDP gain "
               f"(rir) = {t_gain:.2f}x; double-buffer cycle gain (rir) = "
-              f"{db_gain:.2f}x; executed planned "
+              f"{db_gain:.2f}x; fused+per-tensor cycle gain (rir) = "
+              f"{fuse_gain:.2f}x; executed planned "
               f"{executed[(net, 'rir', 'planned')][0]:.0f}us/batch")
     return table
 

@@ -32,15 +32,21 @@ MODES = ("none", "rir", "offchip")
 # scalar sweep over the tiled space would take minutes); the tile axis gets
 # its own sweep + plan entries below.  TILED keeps PR 4 semantics
 # (single-buffered) so the trajectory stays comparable; PIPELINED adds the
-# double-buffer axis.
+# double-buffer axis (PR 5, uniform split); FUSED adds the per-tensor
+# buffer allocation + cross-layer fusion lattice on top.
 PLANNER_OPTS = PlannerOptions(switch_modes=("rir", "offchip"),
                               parallel_dims=("C", "P", "Q"),
-                              search_tiles=False, double_buffer=False)
+                              search_tiles=False, double_buffer=False,
+                              per_tensor_buffers=False, fuse_layers=False)
 TILED_OPTS = PlannerOptions(switch_modes=("rir", "offchip"),
                             parallel_dims=("C", "P", "Q"),
-                            double_buffer=False)
+                            double_buffer=False,
+                            per_tensor_buffers=False, fuse_layers=False)
 PIPELINED_OPTS = PlannerOptions(switch_modes=("rir", "offchip"),
-                                parallel_dims=("C", "P", "Q"))
+                                parallel_dims=("C", "P", "Q"),
+                                per_tensor_buffers=False, fuse_layers=False)
+FUSED_OPTS = PlannerOptions(switch_modes=("rir", "offchip"),
+                            parallel_dims=("C", "P", "Q"))
 
 
 def bench_layer_sweep(cfg: EvalConfig) -> dict:
@@ -118,6 +124,24 @@ def bench_pipelined_plan(graph, cfg: EvalConfig) -> dict:
             "db_steps": sum(1 for s in pipe.steps if s.double_buffer)}
 
 
+def bench_fused_plan(graph, cfg: EvalConfig) -> dict:
+    """Fused-lattice planning (per-tensor allocation + fusion DP states) vs
+    the PR 5 pipelined DP: the larger state space's planning-time cost and
+    its modeled-cycle payoff."""
+    fused, t_fused = measure(
+        lambda: NetworkPlanner(graph, cfg, FUSED_OPTS).plan())
+    pipe = NetworkPlanner(graph, cfg, PIPELINED_OPTS).plan()
+    assert fused.total_cycles <= pipe.total_cycles, graph.name
+    return {"layers": len(graph), "fused_s": t_fused,
+            "fused_cycles": fused.total_cycles,
+            "pipelined_cycles": pipe.total_cycles,
+            "cycles_gain": pipe.total_cycles / fused.total_cycles,
+            "fused_edges": sum(1 for s in fused.steps
+                               if s.fused_with is not None),
+            "per_tensor_steps": sum(1 for s in fused.steps
+                                    if s.buffer_alloc)}
+
+
 def run() -> dict:
     cfg = EvalConfig()
     entry = {
@@ -138,6 +162,10 @@ def run() -> dict:
         "plan_pipelined": {
             "mobilenet_v3": bench_pipelined_plan(mobilenet_v3_graph(), cfg),
             "resnet50": bench_pipelined_plan(resnet50_graph(), cfg),
+        },
+        "plan_fused": {
+            "mobilenet_v3": bench_fused_plan(mobilenet_v3_graph(), cfg),
+            "resnet50": bench_fused_plan(resnet50_graph(), cfg),
         },
     }
     return entry
@@ -175,6 +203,12 @@ def main() -> dict:
             f"plan_speed.pipelined.{net}", r["pipelined_s"] * 1e6,
             f"us;cycles_gain_vs_single_buffered={r['cycles_gain']:.2f}x;"
             f"db_steps={r['db_steps']}/{r['layers']}"))
+    for net, r in entry["plan_fused"].items():
+        rows.append((
+            f"plan_speed.fused.{net}", r["fused_s"] * 1e6,
+            f"us;cycles_gain_vs_pipelined={r['cycles_gain']:.2f}x;"
+            f"fused_edges={r['fused_edges']}/{r['layers']};"
+            f"per_tensor_steps={r['per_tensor_steps']}/{r['layers']}"))
     emit(rows)
     return entry
 

@@ -27,6 +27,23 @@ GEMM_DIMS = ("M", "N", "K")
 # extents are distinct search points with different cost/capacity models.
 PING_PONG = "2B"
 
+# The three on-chip tensors a buffer allocation names, canonical order.
+# A *per-tensor* allocation double-buffers a proper subset of them: each
+# tensor in the subset gets a ping-pong pair (2x its tile footprint), the
+# rest stay single-buffered at 1x.  The uniform PING_PONG tag is the
+# all-three point and keeps its PR 5 capacity/2 semantics bit-for-bit.
+BUFFER_TENSORS = ("iact", "w", "oact")
+
+
+def ping_pong_tag(tensor: str) -> str:
+    """Pseudo-dim tag marking ``tensor`` as individually double-buffered."""
+    assert tensor in BUFFER_TENSORS, tensor
+    return f"{PING_PONG}:{tensor}"
+
+
+def _is_ping_pong_tag(dim: str) -> bool:
+    return dim == PING_PONG or dim.startswith(PING_PONG + ":")
+
 
 @dataclasses.dataclass(frozen=True)
 class ConvWorkload:
@@ -93,6 +110,10 @@ class Dataflow:
     name: str = ""
     double_buffer: bool = False   # ping-pong tile buffers: refetch overlaps
     # compute (half the buffer holds the live tile, half the next fetch)
+    buffer_alloc: Tuple[str, ...] = ()   # per-tensor allocation: the proper
+    # subset of BUFFER_TENSORS that is individually double-buffered; () with
+    # double_buffer=False is fully single-buffered, double_buffer=True is the
+    # uniform all-three ping-pong (buffer_alloc stays empty there)
 
     def spatial_product(self) -> int:
         return math.prod(f for _, f in self.spatial) if self.spatial else 1
@@ -111,21 +132,35 @@ class Dataflow:
             lbl += "@" + "".join(f"{d}{t}" for d, t in self.tiles)
         if self.double_buffer:
             lbl += f"@{PING_PONG}"
+        elif self.buffer_alloc:
+            lbl += f"@{PING_PONG}:" + "+".join(self.buffer_alloc)
         return lbl
+
+    def db_tensors(self) -> frozenset:
+        """The set of tensors whose tiles are ping-pong (double) buffered."""
+        if self.double_buffer:
+            return frozenset(BUFFER_TENSORS)
+        return frozenset(self.buffer_alloc)
 
     def with_tiles(self, tiles: Sequence[Tuple[str, int]]) -> "Dataflow":
         """The same TOPS point with on-chip tile sizes ``tiles`` (a searched
         coordinate: distinct tilings are distinct lattice points).
 
-        A ``(PING_PONG, 1)`` entry in ``tiles`` marks the ping-pong variant
-        of the tiling; it is stripped into ``double_buffer`` so the stored
-        ``tiles`` only ever name real workload dims.
+        A ``(PING_PONG, 1)`` entry in ``tiles`` marks the uniform ping-pong
+        variant of the tiling; per-tensor ``(ping_pong_tag(t), 1)`` entries
+        mark tensor ``t`` as individually double-buffered.  All tags are
+        stripped into ``double_buffer`` / ``buffer_alloc`` so the stored
+        ``tiles`` only ever name real workload dims.  Tagging all three
+        tensors normalizes to the uniform ping-pong point.
         """
         tiles = tuple(tiles)
-        db = any(d == PING_PONG for d, _ in tiles)
+        tags = {d for d, _ in tiles if _is_ping_pong_tag(d)}
+        alloc = tuple(t for t in BUFFER_TENSORS if ping_pong_tag(t) in tags)
+        db = PING_PONG in tags or len(alloc) == len(BUFFER_TENSORS)
         return dataclasses.replace(
-            self, tiles=tuple((d, f) for d, f in tiles if d != PING_PONG),
-            double_buffer=db)
+            self,
+            tiles=tuple((d, f) for d, f in tiles if not _is_ping_pong_tag(d)),
+            double_buffer=db, buffer_alloc=() if db else alloc)
 
     # --------------------------------------------------------------- analysis
     def theoretical_utilization(self, wl: ConvWorkload, num_pes: int) -> float:
@@ -226,15 +261,53 @@ def tile_extents(wl: ConvWorkload, df: Dataflow) -> Dict[str, int]:
     return out
 
 
-def tile_working_set(wl: ConvWorkload, extents: Mapping[str, int]) -> int:
-    """On-chip words one tile of each tensor occupies simultaneously."""
+def tile_footprint_split(wl: ConvWorkload,
+                         extents: Mapping[str, int]) -> Dict[str, int]:
+    """Per-tensor on-chip words one tile occupies, keyed by BUFFER_TENSORS."""
     t = extents
     h = (t["P"] - 1) * wl.stride + t["R"]
     w = (t["Q"] - 1) * wl.stride + t["S"]
-    iact = t["N"] * t["C"] * h * w
-    wgt = t["M"] * t["C"] * t["R"] * t["S"]
-    oact = t["N"] * t["M"] * t["P"] * t["Q"]
-    return iact + wgt + oact
+    return {"iact": t["N"] * t["C"] * h * w,
+            "w": t["M"] * t["C"] * t["R"] * t["S"],
+            "oact": t["N"] * t["M"] * t["P"] * t["Q"]}
+
+
+def tile_working_set(wl: ConvWorkload, extents: Mapping[str, int]) -> int:
+    """On-chip words one tile of each tensor occupies simultaneously."""
+    fp = tile_footprint_split(wl, extents)
+    return fp["iact"] + fp["w"] + fp["oact"]
+
+
+def alloc_working_set(wl: ConvWorkload, extents: Mapping[str, int],
+                      db_tensors: frozenset) -> int:
+    """Buffer words a per-tensor allocation claims: double-buffered tensors
+    hold a ping-pong pair (2x their tile), the rest a single tile."""
+    fp = tile_footprint_split(wl, extents)
+    return sum(fp[t] * (2 if t in db_tensors else 1) for t in BUFFER_TENSORS)
+
+
+def tile_traffic_split(wl: ConvWorkload,
+                       extents: Mapping[str, int]) -> Dict[str, int]:
+    """Per-tensor off-chip words moved for the whole layer under a tiling,
+    keyed by BUFFER_TENSORS (see ``tile_traffic_words`` for the model)."""
+    dims = wl.dims()
+    n = {d: math.ceil(dims[d] / extents[d]) for d in dims}
+    iact_words = math.prod(wl.iact_dims().values())
+    w_words = math.prod(wl.weight_dims().values())
+    oact_words = math.prod(wl.oact_dims().values())
+    m_iact = n["M"]                                  # iActs reread per M tile
+    m_w = n["N"] * n["P"] * n["Q"]                   # weights per output tile
+    m_oact = n["C"] * n["R"] * n["S"]                # partial-sum round trips
+    return {"iact": iact_words * m_iact,
+            "w": w_words * m_w,
+            "oact": oact_words * (2 * m_oact - 1)}
+
+
+def tensor_words_split(wl: ConvWorkload) -> Dict[str, int]:
+    """Whole-tensor words per tensor — the one-pass DRAM stream baseline."""
+    return {"iact": math.prod(wl.iact_dims().values()),
+            "w": math.prod(wl.weight_dims().values()),
+            "oact": math.prod(wl.oact_dims().values())}
 
 
 def tile_traffic_words(wl: ConvWorkload, extents: Mapping[str, int]) -> float:
@@ -246,22 +319,15 @@ def tile_traffic_words(wl: ConvWorkload, extents: Mapping[str, int]) -> float:
     reduction dims.  The whole-tensor default tiling has every multiplier at
     1 and reduces to one pass over each tensor — today's untiled traffic.
     """
-    dims = wl.dims()
-    n = {d: math.ceil(dims[d] / extents[d]) for d in dims}
-    iact_words = math.prod(wl.iact_dims().values())
-    w_words = math.prod(wl.weight_dims().values())
-    oact_words = math.prod(wl.oact_dims().values())
-    m_iact = n["M"]                                  # iActs reread per M tile
-    m_w = n["N"] * n["P"] * n["Q"]                   # weights per output tile
-    m_oact = n["C"] * n["R"] * n["S"]                # partial-sum round trips
-    return (iact_words * m_iact + w_words * m_w
-            + oact_words * (2 * m_oact - 1))
+    tr = tile_traffic_split(wl, extents)
+    return tr["iact"] + tr["w"] + tr["oact"]
 
 
 def enumerate_tilings(wl: ConvWorkload, df: Optional[Dataflow],
                       buffer_bytes: int, dtype_bytes: int = 1,
                       tile_dims: Sequence[str] = ("M", "C", "P", "Q"),
-                      max_tilings: int = 8, ping_pong: bool = True
+                      max_tilings: int = 8, ping_pong: bool = True,
+                      per_tensor: bool = False
                       ) -> Iterator[Tuple[Tuple[str, int], ...]]:
     """Pruned on-chip tile-size candidates for one layer.
 
@@ -280,6 +346,20 @@ def enumerate_tilings(wl: ConvWorkload, df: Optional[Dataflow],
     model (``layoutloop.tile_dram_terms``) charges them half the resident
     capacity but overlaps their refetch traffic with compute.  Each arm is
     capped at ``max_tilings`` independently.
+
+    With ``per_tensor`` additionally set, six more arms cover the proper
+    subsets of ``BUFFER_TENSORS``: tilings maximal under the *allocation-
+    weighted* working set (double-buffered tensors count twice, the rest
+    once) are emitted tagged ``(ping_pong_tag(t), 1)`` per tensor in the
+    subset.  Each per-tensor arm is capped at ``max(1, max_tilings // 4)``
+    so the lattice grows by a bounded factor.  *Fusion headroom* arms
+    follow: tilings maximal in HALF the buffer that keep the reduction
+    dims (C; producer side) or M (consumer side) untiled — the single-pass
+    shapes whose fused-boundary claim (``layoutloop.fusion_feasible``)
+    fits half the buffer, which the capacity-maximal arms above almost
+    never do.  Each comes in a plain single-buffered variant and one with
+    the two non-fused tensors ping-pong'd so their refetch stays
+    pipelined across a fused edge.
 
     ``df`` (optional) lower-bounds each dim's tile at its spatial unroll
     factor; pass ``None`` for a tile axis shared across many dataflows —
@@ -301,29 +381,33 @@ def enumerate_tilings(wl: ConvWorkload, df: Optional[Dataflow],
                 vals.add(v)
             v *= 2
         cands.append(sorted(vals))
-    def ws(combo: Tuple[int, ...]) -> int:
+    def ws(combo: Tuple[int, ...],
+           db: frozenset = frozenset()) -> int:
         ext = dict(dims)
         ext.update(zip(tile_dims, combo))
+        if db:
+            return alloc_working_set(wl, ext, db)
         return tile_working_set(wl, ext)
 
-    nxt = [{v: c[i + 1] for i, v in enumerate(c[:-1])} for c in cands]
-
-    def maximal_tilings(cap: int) -> List[Tuple[Tuple[str, int], ...]]:
+    def maximal_tilings(cap: int, db: frozenset = frozenset(),
+                        cands: List[List[int]] = cands,
+                        ) -> List[Tuple[Tuple[str, int], ...]]:
         # keep only maximal (Pareto) tilings: larger tiles always mean
         # ≥ reuse, so anything dominated by another feasible tiling is dead
         # weight.  Working set is monotone in every tile size, so a feasible
         # combo is dominated iff bumping some single dim to its next
         # candidate stays feasible — an O(dims) test instead of an
         # O(candidates^2) sweep.
+        nxt = [{v: c[i + 1] for i, v in enumerate(c[:-1])} for c in cands]
         maximal: List[Tuple[int, ...]] = []
         for combo in itertools.product(*cands):
-            if ws(combo) > cap:
+            if ws(combo, db) > cap:
                 continue
             bumped = (combo[:i] + (nxt[i][v],) + combo[i + 1:]
                       for i, v in enumerate(combo) if v in nxt[i])
-            if all(ws(b) > cap for b in bumped):
+            if all(ws(b, db) > cap for b in bumped):
                 maximal.append(combo)
-        maximal.sort(key=lambda c: (-ws(c), c))
+        maximal.sort(key=lambda c: (-ws(c, db), c))
         return [tuple((d, v) for d, v in zip(tile_dims, combo)
                       if v < dims[d])
                 for combo in maximal[:max_tilings]]
@@ -340,6 +424,43 @@ def enumerate_tilings(wl: ConvWorkload, df: Optional[Dataflow],
         if tagged not in emitted:
             emitted.add(tagged)
             yield tagged
+    if not per_tensor:
+        return
+    per_arm = max(1, max_tilings // 4)
+    subsets = [("iact",), ("w",), ("oact",),
+               ("iact", "w"), ("iact", "oact"), ("w", "oact")]
+    for subset in subsets:
+        tags = tuple((ping_pong_tag(t), 1) for t in subset)
+        for tiling in maximal_tilings(cap_words, frozenset(subset))[:per_arm]:
+            tagged = tiling + tags
+            if tagged not in emitted:
+                emitted.add(tagged)
+                yield tagged
+    half_cap = max(1, cap_words // 2)
+    # fuse-out / fuse-in single-pass headroom: C untiled (producer side,
+    # oAct streams out once) or M untiled (consumer side, iAct read once).
+    # ``live`` is the tensor pair still hitting DRAM across a fused edge;
+    # double-buffering exactly those keeps their refetch pipelined, and the
+    # alloc-weighted working set (fused tensor x1, live x2) under half the
+    # buffer is precisely the single-pass fused claim
+    # (``layoutloop.fusion_feasible``).  Plain single-buffered variants are
+    # emitted too — cheaper shapes when the refetch is small anyway.
+    for fixed, live in (("C", ("iact", "w")), ("M", ("w", "oact"))):
+        if fixed not in tile_dims:
+            continue
+        cands_f = [([dims[d]] if d == fixed else c)
+                   for d, c in zip(tile_dims, cands)]
+        for tiling in maximal_tilings(half_cap, cands=cands_f)[:per_arm]:
+            if tiling not in emitted:
+                emitted.add(tiling)
+                yield tiling
+        tags = tuple((ping_pong_tag(t), 1) for t in live)
+        for tiling in maximal_tilings(half_cap, frozenset(live),
+                                      cands=cands_f)[:per_arm]:
+            tagged = tiling + tags
+            if tagged not in emitted:
+                emitted.add(tagged)
+                yield tagged
 
 
 def enumerate_dataflows(wl: ConvWorkload, num_pes: int,

@@ -32,6 +32,35 @@ working set still fits the halved resident capacity — the planner's argmin
 moves toward aggressive tilings whose refetch streams for free, exactly the
 "switching under the hood" the paper argues for (§IV's ping-pong Nest
 buffers).
+
+**Per-tensor buffer allocation** (``Dataflow.buffer_alloc``): the uniform
+ping-pong split halves the whole buffer even though weights, iActs and
+partial sums have completely different revisit phases.  A per-tensor
+allocation double-buffers only a subset of the three tensors: each tensor
+in the subset claims a ping-pong pair (2x its tile footprint), the rest a
+single tile, and the spill factor is taken against the full capacity with
+that *allocation-weighted* working set.  The stall model then charges each
+regime its own exposure — the single-buffered tensors' refetch is serial
+(``sb_stall_cycles``, their PR 4 charge), while the double-buffered subset
+runs the steady-state tile pipeline (prologue + per-steady-tile overhang)
+computed from that subset's traffic alone.  The two uniform endpoints
+(no tensor / every tensor double-buffered) bypass the split entirely and
+reproduce the PR 4 / PR 5 numbers bit-for-bit (golden-tested).
+
+**Fusion boundary contract** (``fused_in`` / ``fused_out`` on
+``tile_dram_terms``): a fused layer boundary keeps the boundary tensor
+entirely on chip — the producer's oAct write and the consumer's iAct read
+never touch DRAM, so both their one-pass stream and their refetch traffic
+drop out of the fused side's terms.  This is only sound when the boundary
+tensor actually stays resident: a side that revisits the boundary tensor
+(oAct partial-sum round trips ``n_C*n_R*n_S > 1``; iAct rereads
+``n_M > 1``) must pin the FULL tensor, a single-pass side only stages one
+tile.  ``fusion_feasible`` checks that the pinned residency plus the side's
+allocation-weighted working set fits HALF the buffer, so any producer +
+consumer pair that both pass share the buffer soundly (their combined
+working set fits it whole).  Off-chip reorder modes are incompatible with a
+fused output boundary — relayout there must ride the reduction (RIR) or
+keep the layout.
 * ``evaluate_lattice``  — the full 4-D (dataflow x tile x layout x mode)
   candidate lattice in a handful of vectorized numpy passes: conflict
   statistics come from ``conflicts.assess_iact_conflicts_lattice`` (temporal
@@ -51,8 +80,10 @@ from typing import Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .conflicts import assess_iact_conflicts, assess_iact_conflicts_lattice
-from .dataflow import (ConvWorkload, Dataflow, enumerate_dataflows,
-                       tile_extents, tile_traffic_words, tile_working_set)
+from .dataflow import (BUFFER_TENSORS, ConvWorkload, Dataflow,
+                       enumerate_dataflows, tensor_words_split, tile_extents,
+                       tile_footprint_split, tile_traffic_split,
+                       tile_traffic_words, tile_working_set)
 from .energy import DEFAULT_ENERGY, EnergyModel
 from .layout import Buffer, Layout, conv_layout_space
 from .nest import NestConfig, nest_cycle_terms, nest_cycles
@@ -163,13 +194,29 @@ class TileDramTerms:
     traffic_bytes: float        # total off-chip traffic incl. spill factor
     serial_stall_cycles: float  # PR-4 charge: all beyond-one-pass, serial
     n_tiles: int                # outer-tile iterations of the tile loop
-    tile_mem_cycles: float      # per-tile DRAM cycles (traffic / n / BW)
-    tile_base_cycles: float     # per-tile share of the hidden one-pass stream
+    tile_mem_cycles: float      # per-tile DRAM cycles of the *pipelined*
+    # (double-buffered) tensor subset — all traffic on uniform points
+    tile_base_cycles: float     # per-tile share of that subset's hidden
+    # one-pass stream
     prologue_cycles: float      # first tile's fetch beyond its stream share
-    double_buffer: bool
+    double_buffer: bool         # True iff any tensor's refetch pipelines
+    sb_stall_cycles: float = 0.0   # serial exposure of the single-buffered
+    # tensor subset under a per-tensor allocation (0.0 on uniform points)
 
 
-def tile_dram_terms(wl: ConvWorkload, df: Dataflow, cfg: EvalConfig
+def _fused_residency_words(wl: ConvWorkload, ext, n) -> dict:
+    """Buffer words each fused boundary tensor pins (the fusion contract):
+    the FULL tensor when the tiling revisits it, one tile otherwise."""
+    fp = tile_footprint_split(wl, ext)
+    full = tensor_words_split(wl)
+    return {
+        "iact": full["iact"] if n["M"] > 1 else fp["iact"],
+        "oact": full["oact"] if n["C"] * n["R"] * n["S"] > 1 else fp["oact"],
+    }
+
+
+def tile_dram_terms(wl: ConvWorkload, df: Dataflow, cfg: EvalConfig,
+                    fused_in: bool = False, fused_out: bool = False
                     ) -> TileDramTerms:
     """Off-chip traffic + steady-state pipeline terms for ``df``'s tiling.
 
@@ -192,30 +239,118 @@ def tile_dram_terms(wl: ConvWorkload, df: Dataflow, cfg: EvalConfig
     ``exposed_stall_cycles`` for the double-buffered pipeline.  Both the
     scalar ``evaluate`` and the 4-D lattice call these helpers, so the two
     paths stay bit-identical by construction.
+
+    A *per-tensor* allocation (``df.buffer_alloc``) or a fused boundary
+    (``fused_in`` / ``fused_out``, see the module docstring's fusion
+    contract) takes the general split below instead: per-tensor traffic,
+    per-regime stalls, fused tensors elided from DRAM entirely.  The two
+    uniform endpoints keep the exact float operations above so the PR 4 /
+    PR 5 goldens reproduce bit-for-bit.
     """
     ext = tile_extents(wl, df)
-    traffic_words = tile_traffic_words(wl, ext)
     capacity = cfg.buffer.num_lines * cfg.buffer.line_size
-    if df.double_buffer:
-        capacity = capacity / 2    # ping-pong: half holds the live tile
-    spill = max(1.0, tile_working_set(wl, ext) / capacity)
-    traffic_bytes = traffic_words * cfg.dtype_bytes * spill
-    iact_words = math.prod(wl.iact_dims().values())
-    w_words = math.prod(wl.weight_dims().values())
-    oact_words = math.prod(wl.oact_dims().values())
-    tensor_bytes = (iact_words + w_words + oact_words) * cfg.dtype_bytes
-    serial = max(0.0, (traffic_bytes - tensor_bytes)
-                 / cfg.dram_bytes_per_cycle)
+    db = df.db_tensors()
+    uniform = not db or len(db) == len(BUFFER_TENSORS)
+    if uniform and not fused_in and not fused_out:
+        traffic_words = tile_traffic_words(wl, ext)
+        if df.double_buffer:
+            capacity = capacity / 2    # ping-pong: half holds the live tile
+        spill = max(1.0, tile_working_set(wl, ext) / capacity)
+        traffic_bytes = traffic_words * cfg.dtype_bytes * spill
+        iact_words = math.prod(wl.iact_dims().values())
+        w_words = math.prod(wl.weight_dims().values())
+        oact_words = math.prod(wl.oact_dims().values())
+        tensor_bytes = (iact_words + w_words + oact_words) * cfg.dtype_bytes
+        serial = max(0.0, (traffic_bytes - tensor_bytes)
+                     / cfg.dram_bytes_per_cycle)
+        dims = wl.dims()
+        n_tiles = math.prod(math.ceil(dims[d] / ext[d]) for d in dims)
+        tile_mem = traffic_bytes / n_tiles / cfg.dram_bytes_per_cycle
+        tile_base = tensor_bytes / n_tiles / cfg.dram_bytes_per_cycle
+        return TileDramTerms(
+            traffic_bytes=traffic_bytes, serial_stall_cycles=serial,
+            n_tiles=n_tiles, tile_mem_cycles=tile_mem,
+            tile_base_cycles=tile_base,
+            prologue_cycles=max(0.0, tile_mem - tile_base),
+            double_buffer=df.double_buffer)
+
+    # ---- general per-tensor split (mixed allocation and/or fused boundary)
     dims = wl.dims()
-    n_tiles = math.prod(math.ceil(dims[d] / ext[d]) for d in dims)
-    tile_mem = traffic_bytes / n_tiles / cfg.dram_bytes_per_cycle
-    tile_base = tensor_bytes / n_tiles / cfg.dram_bytes_per_cycle
+    n = {d: math.ceil(dims[d] / ext[d]) for d in dims}
+    fused = frozenset(t for t, f in (("iact", fused_in), ("oact", fused_out))
+                      if f)
+    live = [t for t in BUFFER_TENSORS if t not in fused]
+    fp = tile_footprint_split(wl, ext)
+    full = tensor_words_split(wl)
+    need = _fused_residency_words(wl, ext, n)
+    claim = sum(need[t] if t in fused else fp[t] * (2 if t in db else 1)
+                for t in BUFFER_TENSORS)
+    spill = max(1.0, claim / capacity)
+    tr = tile_traffic_split(wl, ext)
+    bw = cfg.dram_bytes_per_cycle
+    traffic_bytes = sum(tr[t] for t in live) * cfg.dtype_bytes * spill
+    tensor_bytes = sum(full[t] for t in live) * cfg.dtype_bytes
+    serial = max(0.0, (traffic_bytes - tensor_bytes) / bw)
+    sb_live = [t for t in live if t not in db]
+    db_live = [t for t in live if t in db]
+    sb_traffic = sum(tr[t] for t in sb_live) * cfg.dtype_bytes * spill
+    sb_base = sum(full[t] for t in sb_live) * cfg.dtype_bytes
+    sb_stall = max(0.0, (sb_traffic - sb_base) / bw)
+    db_traffic = sum(tr[t] for t in db_live) * cfg.dtype_bytes * spill
+    db_base = sum(full[t] for t in db_live) * cfg.dtype_bytes
+    n_tiles = math.prod(n.values())
+    tile_mem = db_traffic / n_tiles / bw
+    tile_base = db_base / n_tiles / bw
     return TileDramTerms(
         traffic_bytes=traffic_bytes, serial_stall_cycles=serial,
-        n_tiles=n_tiles, tile_mem_cycles=tile_mem,
-        tile_base_cycles=tile_base,
+        n_tiles=n_tiles, tile_mem_cycles=tile_mem, tile_base_cycles=tile_base,
         prologue_cycles=max(0.0, tile_mem - tile_base),
-        double_buffer=df.double_buffer)
+        double_buffer=bool(db_live), sb_stall_cycles=sb_stall)
+
+
+def fusion_feasible(wl: ConvWorkload, df: Dataflow, cfg: EvalConfig,
+                    fused_in: bool = False, fused_out: bool = False) -> bool:
+    """Whether this side of a fused edge fits HALF the buffer: the fused
+    boundary tensors' pinned residency plus the allocation-weighted tiles of
+    everything else.  Producer and consumer each passing their own check
+    guarantees the pair's combined working set fits the whole buffer."""
+    if not fused_in and not fused_out:
+        return True
+    ext = tile_extents(wl, df)
+    dims = wl.dims()
+    n = {d: math.ceil(dims[d] / ext[d]) for d in dims}
+    fused = frozenset(t for t, f in (("iact", fused_in), ("oact", fused_out))
+                      if f)
+    fp = tile_footprint_split(wl, ext)
+    need = _fused_residency_words(wl, ext, n)
+    db = df.db_tensors()
+    claim = sum(need[t] if t in fused else fp[t] * (2 if t in db else 1)
+                for t in BUFFER_TENSORS)
+    return claim <= cfg.buffer.num_lines * cfg.buffer.line_size / 2
+
+
+def refused_metrics(wl: ConvWorkload, df: Dataflow, cfg: EvalConfig,
+                    m: Metrics, fused_in: bool = False,
+                    fused_out: bool = False) -> Metrics:
+    """``m`` (an unfused ``evaluate`` result for this lattice point) with
+    the fused boundary's DRAM terms elided: the stall is re-derived from the
+    fused ``tile_dram_terms`` and the energy/traffic swap the old DRAM
+    charge for the fused one (``EnergyModel.dram_bytes_pj`` is linear, so
+    the swap is exact).  Reorder terms are untouched — callers must not
+    combine ``fused_out`` with the off-chip reorder mode."""
+    if not fused_in and not fused_out:
+        return m
+    e = cfg.energy
+    t0 = tile_dram_terms(wl, df, cfg)
+    t1 = tile_dram_terms(wl, df, cfg, fused_in=fused_in, fused_out=fused_out)
+    stall = exposed_stall_cycles(t1, m.compute_cycles)
+    cycles = m.compute_cycles + m.reorder_cycles + stall
+    energy = m.energy_pj - e.dram_bytes_pj(t0.traffic_bytes) \
+        + e.dram_bytes_pj(t1.traffic_bytes)
+    dram_bytes = m.dram_bytes - t0.traffic_bytes + t1.traffic_bytes
+    return dataclasses.replace(
+        m, cycles=cycles, energy_pj=energy, dram_bytes=dram_bytes,
+        dram_stall_cycles=stall, pj_per_mac=energy / max(wl.macs(), 1))
 
 
 def exposed_stall_cycles(terms: TileDramTerms, compute_cycles: float
@@ -230,13 +365,18 @@ def exposed_stall_cycles(terms: TileDramTerms, compute_cycles: float
     the overlapped compute cover.  The steady overhang is bounded by the
     serial per-tile charge (``max(tile_base, c) >= tile_base``), so for the
     same traffic the double-buffered exposure never exceeds the serial one.
+
+    Under a per-tensor allocation the pipeline terms cover only the
+    double-buffered tensor subset; the single-buffered tensors' serial
+    charge (``sb_stall_cycles``, 0.0 on uniform points) is added on top.
     """
     if not terms.double_buffer:
         return terms.serial_stall_cycles
     per_tile_compute = compute_cycles / terms.n_tiles
     hidden = max(terms.tile_base_cycles, per_tile_compute)
     steady = max(0.0, terms.tile_mem_cycles - hidden)
-    return terms.prologue_cycles + (terms.n_tiles - 1) * steady
+    return terms.sb_stall_cycles + terms.prologue_cycles \
+        + (terms.n_tiles - 1) * steady
 
 
 def evaluate(wl: ConvWorkload, df: Dataflow, layout: Layout,
@@ -404,6 +544,7 @@ def evaluate_lattice(wl: ConvWorkload, dataflows: Sequence[Dataflow],
     tile_mem = np.zeros((nd, nt))           # per-tile pipeline terms
     tile_base = np.zeros((nd, nt))
     prologue = np.zeros((nd, nt))
+    sb_stall = np.zeros((nd, nt))           # per-tensor sb-subset exposure
     n_tiles = np.ones((nd, nt))
     db_mask = np.zeros((nd, nt), bool)
     for di, df in enumerate(dataflows):
@@ -416,6 +557,7 @@ def evaluate_lattice(wl: ConvWorkload, dataflows: Sequence[Dataflow],
             tile_mem[di, ti] = terms.tile_mem_cycles
             tile_base[di, ti] = terms.tile_base_cycles
             prologue[di, ti] = terms.prologue_cycles
+            sb_stall[di, ti] = terms.sb_stall_cycles
             n_tiles[di, ti] = terms.n_tiles
             db_mask[di, ti] = terms.double_buffer
 
@@ -436,7 +578,7 @@ def evaluate_lattice(wl: ConvWorkload, dataflows: Sequence[Dataflow],
     per_tile_compute = compute / n_tiles[:, :, None, None]
     hidden = np.maximum(tile_base[:, :, None, None], per_tile_compute)
     steady_stall = np.maximum(0.0, tile_mem[:, :, None, None] - hidden)
-    pipe_stall = prologue[:, :, None, None] \
+    pipe_stall = sb_stall[:, :, None, None] + prologue[:, :, None, None] \
         + (n_tiles - 1.0)[:, :, None, None] * steady_stall
     dram_stall = np.where(db_mask[:, :, None, None], pipe_stall,
                           serial_stall[:, :, None, None])

@@ -63,8 +63,12 @@ def step_rows(events: List[Dict[str, Any]], freq_ghz: float
             "lowering": a.get("lowering", "?"),
             "reorder": a.get("reorder", "?"),
             "double_buffer": a.get("double_buffer", False),
+            "buffer_alloc": a.get("buffer_alloc", ""),
+            "fused_group": a.get("fused_group"),
             "modeled_cycles": float(a["modeled_cycles"]),
             "modeled_energy_pj": float(a.get("modeled_energy_pj", 0.0)),
+            "modeled_stall_cycles": float(a.get("modeled_stall_cycles",
+                                                0.0)),
             "durs_us": []})
         g["durs_us"].append(float(e["dur"]))
     rows = []
@@ -75,6 +79,11 @@ def step_rows(events: List[Dict[str, Any]], freq_ghz: float
         g["modeled_us"] = g["modeled_cycles"] / (freq_ghz * 1e3)
         g["gap"] = (g["measured_us"] / g["modeled_us"]
                     if g["modeled_us"] > 0 else float("inf"))
+        # the modeled total splits into exposed DRAM stall vs everything
+        # else (compute + reorder): the share tells whether closing a gap
+        # means fixing the stall model or the compute model
+        g["stall_frac"] = (g["modeled_stall_cycles"] / g["modeled_cycles"]
+                           if g["modeled_cycles"] > 0 else 0.0)
         rows.append(g)
     rows.sort(key=lambda r: (r["plan_id"], r["step"]))
     med = _median([r["gap"] for r in rows])
@@ -117,6 +126,9 @@ def build_report(events: List[Dict[str, Any]], freq_ghz: float = 1.0,
             "measured_us": sum(r["measured_us"] * r["runs"] for r in rows),
             "executions": sum(r["runs"] for r in rows),
             "median_gap": _median([r["gap"] for r in rows]),
+            "modeled_stall_cycles": sum(r["modeled_stall_cycles"]
+                                        for r in rows),
+            "modeled_cycles": sum(r["modeled_cycles"] for r in rows),
         },
         "planner": _span_stats(events, "planner."),
         "exec_spans": _span_stats(events, "exec."),
@@ -135,7 +147,8 @@ def format_report(rep: Dict[str, Any]) -> str:
                      f"(modeled @ {rep['freq_ghz']:g} GHz; gap = "
                      f"measured/modeled, rel = gap/median-gap):")
         hdr = (f"  {'step':>4} {'layer':24} {'lowering':9} {'db':2} "
-               f"{'modeled_cyc':>12} {'modeled_us':>11} {'measured_us':>12} "
+               f"{'alloc':12} {'modeled_cyc':>12} {'stall%':>6} "
+               f"{'modeled_us':>11} {'measured_us':>12} "
                f"{'runs':>4} {'gap':>9} {'rel':>6}")
         lines.append(hdr)
         cur_plan = None
@@ -143,17 +156,26 @@ def format_report(rep: Dict[str, Any]) -> str:
             if r["plan_id"] != cur_plan:
                 cur_plan = r["plan_id"]
                 lines.append(f"  plan {cur_plan} ({r['graph']}):")
+            label = r["layer"]
+            if r.get("fused_group"):
+                label = f"{label}[{r['fused_group']}]"
             lines.append(
-                f"  {r['step']:>4} {r['layer']:24.24} {r['lowering']:9} "
+                f"  {r['step']:>4} {label:24.24} {r['lowering']:9} "
                 f"{'y' if r['double_buffer'] else 'n':2} "
-                f"{r['modeled_cycles']:>12.0f} {r['modeled_us']:>11.2f} "
+                f"{r['buffer_alloc'] or '-':12.12} "
+                f"{r['modeled_cycles']:>12.0f} "
+                f"{100 * r['stall_frac']:>5.1f}% "
+                f"{r['modeled_us']:>11.2f} "
                 f"{r['measured_us']:>12.1f} {r['runs']:>4} "
                 f"{r['gap']:>9.2f} {r['rel_gap']:>6.2f}")
         t = rep["totals"]
+        stall_pct = (100 * t["modeled_stall_cycles"] / t["modeled_cycles"]
+                     if t["modeled_cycles"] > 0 else 0.0)
         lines.append(
             f"  totals: modeled {t['modeled_us']:.1f} us, measured "
             f"{t['measured_us']:.1f} us over {t['executions']} step "
-            f"executions; median gap {t['median_gap']:.2f}x")
+            f"executions; median gap {t['median_gap']:.2f}x; "
+            f"{stall_pct:.1f}% of modeled cycles are exposed DRAM stalls")
         if rep["worst"]:
             lines.append("  worst offenders (largest measured/modeled gap):")
             for r in rep["worst"]:

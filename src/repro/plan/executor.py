@@ -39,6 +39,11 @@ convolutions and residual joins included — through the same Pallas path:
   (``PlanStep.joins``) is applied, and when the two boundary layouts agree
   the residual add is FUSED into the consumer's ``rir_matmul`` epilogue
   (the kernel's ``residual`` operand) — no separate pass.
+* Fused layer groups (``PlanStep.fused_with``, schema v4) chain the
+  producer's ``rir_matmul`` epilogue straight into the consumer's im2col
+  patch gather: within a group no fence is inserted and no intermediate is
+  forced to materialize in HBM — the group executes (and is measured) as
+  one unit, with the math left bit-identical to the unfused schedule.
 
 All of it validates against the canonical ``execute_network_reference``
 oracle built on ``kernels/ref.py`` conv/depthwise references.
@@ -79,12 +84,20 @@ def _step_attrs(prov: Dict[str, object], i: int, step: PlanStep
     Recording the analytical ``cycles``/``energy_pj`` next to the measured
     wall-clock (the span's ``dur``) is what makes the trace a calibration
     artifact: ``repro.obs.report`` computes the model-vs-measured gap per
-    step straight from these events.
+    step straight from these events.  ``modeled_stall_cycles`` splits the
+    modeled total into exposed-DRAM-stall vs compute so the gap can be
+    attributed; ``buffer_alloc`` is the per-tensor ping-pong subset the
+    planner chose (empty = uniform split), ``fused_with`` the consumer a
+    fused step chains into without touching HBM.
     """
     d = dict(prov)
     d.update(step=i, layer=step.layer, lowering=step.lowering,
              reorder=step.reorder, double_buffer=step.double_buffer,
-             modeled_cycles=step.cycles, modeled_energy_pj=step.energy_pj)
+             modeled_cycles=step.cycles, modeled_energy_pj=step.energy_pj,
+             modeled_stall_cycles=step.dram_stall_cycles,
+             buffer_alloc="+".join(step.buffer_alloc))
+    if step.fused_with is not None:
+        d["fused_with"] = step.fused_with
     return d
 
 
@@ -96,6 +109,31 @@ def _pow2_floor(x: int) -> int:
     return 1 << (max(1, int(x)).bit_length() - 1)
 
 
+def _pow2_ceil(x: int) -> int:
+    return 1 << (max(1, int(x)) - 1).bit_length()
+
+
+# the smallest row block the tile-derived grid may shrink to when the tile
+# itself is tiny: the f32 sublane tile height (Pallas min tile is (8, 128))
+_SUBLANE_MIN = 8
+
+
+def _clamp_block(extent: int, block: int) -> int:
+    """Kernel block for one axis of a tiled extent.
+
+    Extents at or above ``MIN_KERNEL_BLOCK`` keep the old rule — the
+    largest power of two under the extent, clamped into
+    ``[MIN_KERNEL_BLOCK, block]``.  Extents BELOW it used to be silently
+    rounded UP to ``MIN_KERNEL_BLOCK`` (a 4-row depthwise tile got a
+    64-row block: 16x zero padding per grid cell); now they get the
+    smallest power of two covering the extent, floored at the f32 sublane
+    minimum, so the grid matches what the tile actually keeps resident.
+    """
+    return max(_SUBLANE_MIN,
+               min(block, _pow2_ceil(extent),
+                   max(MIN_KERNEL_BLOCK, _pow2_floor(extent))))
+
+
 def step_kernel_blocks(step: PlanStep, block: int = RIR_BLOCK
                        ) -> Tuple[int, int]:
     """(block_m, block_k) the kernel grid should use for this step.
@@ -103,12 +141,13 @@ def step_kernel_blocks(step: PlanStep, block: int = RIR_BLOCK
     The plan's on-chip tiling bounds how many GEMM rows (``N*P*Q`` tile) and
     reduction elements (``C`` tile x taps) one pass keeps resident, so the
     kernel's block/grid shape follows the artifact instead of a hardcoded
-    constant: the largest power of two under the tile extent, clamped into
-    ``[MIN_KERNEL_BLOCK, block]``.  A double-buffered step (schema v3) only
-    keeps HALF the tile resident per ping-pong phase, so the row extent
-    absorbs one halving before the pow-2 floor (halving a single axis
+    constant (``_clamp_block`` per axis).  A double-buffered step (schema
+    v3) only keeps HALF the tile resident per ping-pong phase, so the row
+    extent absorbs one halving before the clamp (halving a single axis
     halves the block footprint, matching the cost model's halved
-    capacity).  Tile-less single-buffered
+    capacity); a per-tensor allocation (schema v4) halves the rows only
+    when the iActs are among the ping-pong'd tensors — single-buffered
+    iActs keep their full tile resident.  Tile-less single-buffered
     steps (v1 artifacts, untiled plans) keep the full ``block`` — the
     pre-tiling behaviour.  The output feature axis always stays at
     ``block``: epilogue permutations are defined over ``RIR_BLOCK``-wide
@@ -124,11 +163,11 @@ def step_kernel_blocks(step: PlanStep, block: int = RIR_BLOCK
 
     rows = ext("N", wl.N) * ext("P", wl.P) * ext("Q", wl.Q)
     kdim = ext("C", wl.C) * wl.R * wl.S
-    if step.double_buffer:
+    db_iact = ("iact" in step.buffer_alloc) if step.buffer_alloc \
+        else step.double_buffer
+    if db_iact:
         rows = max(1, rows // 2)
-    bm = max(MIN_KERNEL_BLOCK, min(block, _pow2_floor(rows)))
-    bk = max(MIN_KERNEL_BLOCK, min(block, _pow2_floor(kdim)))
-    return bm, bk
+    return _clamp_block(rows, block), _clamp_block(kdim, block)
 
 
 def fold_batchnorm(w: jax.Array, gamma, beta, mean, var,
@@ -623,6 +662,23 @@ class PreparedNetwork:
                 out_shape=(wl.N, wl.P, wl.Q, wl.M),
                 block_m=bm, block_k=bk, bias=bias))
         self._buffer_set = set(graph.buffer_sources())
+        # fused groups (schema v4): ``fused_with`` chains a step into its
+        # immediate consumer — the intermediate never round-trips HBM, so
+        # the group is fenced (and its wall-clock measured) as ONE unit.
+        # ``_group_start[i]`` is the first member of the group step i
+        # closes; unfused steps are their own group.
+        for i, step in enumerate(plan.steps):
+            if step.fused_with is not None and step.fused_with != i + 1:
+                raise PlanError(f"step {step.layer}: fused_with="
+                                f"{step.fused_with} is not the next layer")
+        if plan.steps and plan.steps[-1].fused_with is not None:
+            raise PlanError("last step cannot fuse into a consumer")
+        self._group_start: List[int] = []
+        start = 0
+        for i, step in enumerate(plan.steps):
+            self._group_start.append(start)
+            if step.fused_with is None:
+                start = i + 1
         self._prov: Optional[Dict[str, object]] = None
 
     def _provenance(self) -> Dict[str, object]:
@@ -718,9 +774,10 @@ class PreparedNetwork:
                 cur = apply_block_perm(cur, self.perms[0], block)
             buffers: Dict[int, jax.Array] = {}
             last = len(self.steps) - 1
+            t0 = None
             for i, st in enumerate(self.steps):
                 faults.site("exec.dispatch")
-                if traced:
+                if traced and self._group_start[i] == i:
                     t0 = obs.now_us()
                 if st.row_map is None:
                     patches = cur
@@ -764,12 +821,24 @@ class PreparedNetwork:
                     y = y + self._join_term(st, je, buffers[je.src], block)
                 if activation is not None and i < last:
                     y = activation(y)
-                if traced:
+                # a fused step's output stays on device inside the group:
+                # no fence, no span — the group's tail measures the whole
+                # chain (the intermediate never materializes in HBM)
+                if traced and self.plan.steps[i].fused_with is None:
                     y = jax.block_until_ready(y)
-                    obs.record_span(
-                        "exec.step", t0,
-                        _step_attrs(self._provenance(), i,
-                                    self.plan.steps[i]))
+                    gs = self._group_start[i]
+                    attrs = _step_attrs(self._provenance(), i,
+                                        self.plan.steps[i])
+                    if gs != i:
+                        members = self.plan.steps[gs:i + 1]
+                        attrs.update(
+                            fused_group=f"{gs}-{i}",
+                            modeled_cycles=sum(s.cycles for s in members),
+                            modeled_energy_pj=sum(s.energy_pj
+                                                  for s in members),
+                            modeled_stall_cycles=sum(s.dram_stall_cycles
+                                                     for s in members))
+                    obs.record_span("exec.step", t0, attrs)
                 if i in self._buffer_set:
                     buffers[i] = y
                 cur = y

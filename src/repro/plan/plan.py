@@ -27,11 +27,17 @@ log = obs.get_logger("plan")
 # v2 added the planned on-chip tiling (``PlanStep.tiles`` + the dataflow's
 # ``tiles`` coordinate); v3 adds the double-buffer choice
 # (``PlanStep.double_buffer`` + ``Dataflow.double_buffer``) — the ping-pong
-# tile pipeline that overlaps refetch with compute.  Older artifacts load
-# with the default: v1 steps get the whole-tensor tiling, v1/v2 steps are
-# single-buffered, both executing exactly as before.
-PLAN_VERSION = 3
-COMPAT_VERSIONS = (1, 2, 3)
+# tile pipeline that overlaps refetch with compute; v4 adds cross-layer
+# fusion (``PlanStep.fused_with`` chains a step to its consumer, whose
+# intermediate never touches DRAM) and the per-tensor buffer allocation
+# (``PlanStep.buffer_alloc`` / ``Dataflow.buffer_alloc`` — which of
+# iact/w/oact got a ping-pong pair) plus the modeled exposed-stall share
+# (``PlanStep.dram_stall_cycles``).  Older artifacts load with the
+# defaults: v1 steps get the whole-tensor tiling, v1/v2 steps are
+# single-buffered, v1-v3 steps are unfused with the uniform split — all
+# executing exactly as before.
+PLAN_VERSION = 4
+COMPAT_VERSIONS = (1, 2, 3, 4)
 RIR_BLOCK = 128   # kernel feature-block granularity (MXU lane width)
 
 
@@ -50,6 +56,7 @@ def dataflow_to_dict(df: Dataflow) -> Dict:
             "order": list(df.order),
             "tiles": [list(p) for p in df.tiles],
             "double_buffer": df.double_buffer,
+            "buffer_alloc": list(df.buffer_alloc),
             "name": df.name}
 
 
@@ -58,6 +65,7 @@ def dataflow_from_dict(d: Dict) -> Dataflow:
                     order=tuple(d["order"]),
                     tiles=tuple((x, int(f)) for x, f in d.get("tiles", ())),
                     double_buffer=bool(d.get("double_buffer", False)),
+                    buffer_alloc=tuple(d.get("buffer_alloc", ())),
                     name=d["name"])
 
 
@@ -133,6 +141,9 @@ class PlanStep:
     joins: Tuple[JoinSpec, ...] = ()   # skip edges adding at the out boundary
     tiles: Tuple[Tuple[str, int], ...] = ()   # planned on-chip tiling (v2)
     double_buffer: bool = False    # ping-pong tile buffers planned (v3)
+    buffer_alloc: Tuple[str, ...] = ()   # per-tensor ping-pong subset (v4)
+    fused_with: Optional[int] = None   # next-layer index this step fuses into
+    dram_stall_cycles: float = 0.0     # modeled exposed-stall share (v4)
 
     def to_dict(self) -> Dict:
         return {"layer": self.layer,
@@ -146,15 +157,21 @@ class PlanStep:
                 "lowering": self.lowering,
                 "joins": [j.to_dict() for j in self.joins],
                 "tiles": [list(p) for p in self.tiles],
-                "double_buffer": self.double_buffer}
+                "double_buffer": self.double_buffer,
+                "buffer_alloc": list(self.buffer_alloc),
+                "fused_with": self.fused_with,
+                "dram_stall_cycles": self.dram_stall_cycles}
 
     @staticmethod
     def from_dict(d: Dict) -> "PlanStep":
         # v1 steps carry no "tiles" key: fall back to the dataflow's tiling
         # (empty in v1 artifacts == the default whole-tensor tiling); v1/v2
-        # steps carry no "double_buffer" and load single-buffered
+        # steps carry no "double_buffer" and load single-buffered; v1-v3
+        # steps carry no "buffer_alloc"/"fused_with" and load as
+        # uniform-split unfused
         tiles = d.get("tiles", d["dataflow"].get("tiles", ()))
         db = d.get("double_buffer", d["dataflow"].get("double_buffer", False))
+        fused = d.get("fused_with")
         return PlanStep(
             layer=d["layer"], workload=workload_from_dict(d["workload"]),
             dataflow=dataflow_from_dict(d["dataflow"]),
@@ -166,7 +183,11 @@ class PlanStep:
             lowering=d.get("lowering", "gemm"),
             joins=tuple(JoinSpec.from_dict(j) for j in d.get("joins", ())),
             tiles=tuple((x, int(f)) for x, f in tiles),
-            double_buffer=bool(db))
+            double_buffer=bool(db),
+            buffer_alloc=tuple(
+                d.get("buffer_alloc", d["dataflow"].get("buffer_alloc", ()))),
+            fused_with=int(fused) if fused is not None else None,
+            dram_stall_cycles=float(d.get("dram_stall_cycles", 0.0)))
 
 
 @dataclasses.dataclass(frozen=True)

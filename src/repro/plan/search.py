@@ -32,7 +32,9 @@ from repro.core.dataflow import (Dataflow, enumerate_dataflows,
 from repro.core.layout import Layout, conv_layout_space
 from repro.core.layoutloop import (EvalConfig, LatticeMetrics, Metrics,
                                    evaluate, evaluate_lattice,
-                                   reorder_overhead)
+                                   exposed_stall_cycles, fusion_feasible,
+                                   refused_metrics, reorder_overhead,
+                                   tile_dram_terms)
 from repro.core.workloads import is_depthwise
 
 from .graph import LayerGraph
@@ -59,6 +61,16 @@ class PlannerOptions:
     compute — as extra lattice points; the single-buffered candidates stay
     in the space, so the double-buffered DP never loses to the
     single-buffered one either.
+    ``per_tensor_buffers`` grows the tile axis with per-tensor allocation
+    arms (``Dataflow.buffer_alloc``: each of weights/iActs/oActs single- or
+    double-buffered independently) plus the fusion-headroom shapes; the
+    uniform points stay in the space, so the per-tensor DP never loses to
+    the uniform one.  ``fuse_layers`` makes fused layer pairs DP states:
+    a path may declare the edge to the next layer *fused* — the boundary
+    tensor never touches DRAM (``layoutloop.refused_metrics``) — when both
+    sides pass ``layoutloop.fusion_feasible`` and the boundary's reorder is
+    on-chip (RIR or identity); the unfused branch is always searched too,
+    so the fused DP never loses to the unfused one.
     """
 
     objective: str = "cycles"
@@ -76,6 +88,8 @@ class PlannerOptions:
     max_tilings: int = 8
     tile_dims: Tuple[str, ...] = ("M", "C", "P", "Q")
     double_buffer: bool = True
+    per_tensor_buffers: bool = True
+    fuse_layers: bool = True
 
     def key(self) -> str:
         return repr(self)
@@ -112,6 +126,8 @@ class _StepChoice:
     mode: str
     key: float
     tiles: Tuple[Tuple[str, int], ...] = ()
+    fused_in: bool = False     # consumes the previous layer's oActs on chip
+    fused_out: bool = False    # feeds the next layer without touching DRAM
 
 
 @dataclasses.dataclass
@@ -122,6 +138,9 @@ class _Path:
     transition_cycles: float
     boundaries: Tuple[str, ...]            # layout names, len = layer_idx + 1
     choices: Tuple[_StepChoice, ...]
+    fuse_next: bool = False    # the last layer's output edge is fused: the
+    # next layer MUST consume it on chip (fused_in), and the path cannot
+    # terminate here
 
 
 class NetworkPlanner:
@@ -162,12 +181,13 @@ class NetworkPlanner:
             self._tilings = {i: tuple(enumerate_tilings(
                 wl, None, cap_bytes, cfg.dtype_bytes,
                 tile_dims=opts.tile_dims, max_tilings=opts.max_tilings,
-                ping_pong=opts.double_buffer))
+                ping_pong=opts.double_buffer,
+                per_tensor=opts.per_tensor_buffers))
                 for i, wl in enumerate(graph.layers)}
         else:
             self._tilings = {i: ((),) for i in range(len(graph))}
-        self._layer_memo: Dict[Tuple[int, str, str],
-                               Tuple[float, Dataflow, Metrics]] = {}
+        self._layer_memo: Dict[Tuple[int, str, str, bool, bool],
+                               Optional[Tuple[float, Dataflow, Metrics]]] = {}
         self._skip_memo: Dict[int, Tuple[float, float]] = {}
         # every mode any boundary can engage (step_choice prepends "none")
         self._modes: Tuple[str, ...] = ("none",) + tuple(
@@ -177,6 +197,11 @@ class NetworkPlanner:
         self._use_lattice = use_lattice
         self._tables: Dict[int, LatticeMetrics] = {}
         self._keys: Dict[int, "np.ndarray"] = {}
+        # fused-variant key tables per (layer, fused_in, fused_out); the
+        # set of layers that may fuse their output edge into the next layer
+        self._variant_memo: Dict[Tuple[int, bool, bool], "np.ndarray"] = {}
+        self._no_fuse_out = frozenset(graph.buffer_sources()) \
+            | {len(graph) - 1}
         if obs.enabled():
             # candidate-count gauges: how big the search space this planner
             # instance sweeps actually is (guarded — the sums are real work)
@@ -214,26 +239,119 @@ class NetworkPlanner:
             for i in range(len(self.graph)):
                 self._table(i)
 
+    def _variant_keys(self, i: int, fused_in: bool, fused_out: bool
+                      ) -> "np.ndarray":
+        """Layer ``i``'s objective-key table with the fused boundary's DRAM
+        terms elided — the lattice-path twin of ``refused_metrics``.
+
+        Rebuilds only the (dataflow, tile)-indexed stall/energy deltas; the
+        conflict/nest arrays are shared with the base table.  Points that
+        fail ``fusion_feasible`` (and every off-chip-reorder column when the
+        output edge is fused) are +inf, mirroring the scalar path's skips.
+        """
+        memo = self._variant_memo.get((i, fused_in, fused_out))
+        if memo is not None:
+            return memo
+        tab = self._table(i)
+        wl = self.graph.layers[i]
+        e = self.cfg.energy
+        nd, nt, nl, nm = tab.shape
+        serial = np.zeros((nd, nt))
+        tile_mem = np.zeros((nd, nt))
+        tile_base = np.zeros((nd, nt))
+        prologue = np.zeros((nd, nt))
+        sb_stall = np.zeros((nd, nt))
+        n_tiles = np.ones((nd, nt))
+        db_mask = np.zeros((nd, nt), bool)
+        dram_pj0 = np.zeros((nd, nt))
+        dram_pj1 = np.zeros((nd, nt))
+        feasible = np.zeros((nd, nt), bool)
+        for di in range(nd):
+            for ti in range(nt):
+                df_t = tab.point_dataflow(di, ti)
+                if not fusion_feasible(wl, df_t, self.cfg,
+                                       fused_in=fused_in,
+                                       fused_out=fused_out):
+                    continue
+                feasible[di, ti] = True
+                t0 = tile_dram_terms(wl, df_t, self.cfg)
+                t1 = tile_dram_terms(wl, df_t, self.cfg,
+                                     fused_in=fused_in, fused_out=fused_out)
+                serial[di, ti] = t1.serial_stall_cycles
+                tile_mem[di, ti] = t1.tile_mem_cycles
+                tile_base[di, ti] = t1.tile_base_cycles
+                prologue[di, ti] = t1.prologue_cycles
+                sb_stall[di, ti] = t1.sb_stall_cycles
+                n_tiles[di, ti] = t1.n_tiles
+                db_mask[di, ti] = t1.double_buffer
+                dram_pj0[di, ti] = e.dram_bytes_pj(t0.traffic_bytes)
+                dram_pj1[di, ti] = e.dram_bytes_pj(t1.traffic_bytes)
+        # ``exposed_stall_cycles`` in array form against the base compute
+        # table — op order mirrors the scalar helper exactly so the chosen
+        # point's ``refused_metrics`` reproduce these keys bit-for-bit
+        compute = tab.compute_cycles
+        per_tile = compute / n_tiles[:, :, None, None]
+        hidden = np.maximum(tile_base[:, :, None, None], per_tile)
+        steady = np.maximum(0.0, tile_mem[:, :, None, None] - hidden)
+        pipe = sb_stall[:, :, None, None] + prologue[:, :, None, None] \
+            + (n_tiles - 1.0)[:, :, None, None] * steady
+        stall = np.where(db_mask[:, :, None, None], pipe,
+                         serial[:, :, None, None])
+        cycles = compute + tab.reorder_cycles + stall
+        energy = tab.energy_pj - dram_pj0[:, :, None, None] \
+            + dram_pj1[:, :, None, None]
+        if self.opts.objective == "cycles":
+            keys = cycles.copy()
+        elif self.opts.objective == "energy":
+            keys = energy.copy()
+        else:
+            keys = energy * cycles
+        keys[~feasible] = np.inf
+        if fused_out and "offchip" in self._mode_idx:
+            keys[:, :, :, self._mode_idx["offchip"]] = np.inf
+        self._variant_memo[(i, fused_in, fused_out)] = keys
+        return keys
+
     # ---------------------------------------------------------------- layer cost
-    def layer_cost(self, i: int, layout: Layout, mode: str
-                   ) -> Tuple[float, Dataflow, Metrics]:
+    def layer_cost(self, i: int, layout: Layout, mode: str,
+                   fused_in: bool = False, fused_out: bool = False
+                   ) -> Optional[Tuple[float, Dataflow, Metrics]]:
         """Min-cost (dataflow, tiling) for layer i reading ``layout``,
-        reorder ``mode`` — the returned dataflow carries the tiling."""
-        memo_key = (i, layout.name(), mode)
-        hit = self._layer_memo.get(memo_key)
-        if hit is not None:
-            return hit
+        reorder ``mode`` — the returned dataflow carries the tiling.
+
+        With a fused boundary (``fused_in`` / ``fused_out``) the cost is the
+        fused variant (``refused_metrics``); returns ``None`` when no
+        candidate passes the fusion-feasibility check (or the mode is
+        off-chip with a fused output, which cannot relayout on chip)."""
+        fused = fused_in or fused_out
+        if fused_out and mode == "offchip":
+            return None
+        memo_key = (i, layout.name(), mode, fused_in, fused_out)
+        if memo_key in self._layer_memo:
+            return self._layer_memo[memo_key]
         j = self._layout_idx.get(layout.name())
         mi = self._mode_idx.get(mode)
         nt = len(self._tilings[i])
+        best: Optional[Tuple[float, Dataflow, Metrics]]
         if self._use_lattice and j is not None and mi is not None:
             tab = self._table(i)
-            keys = self._keys[i][:, :, j, mi]
+            if fused:
+                keys = self._variant_keys(i, fused_in, fused_out)[:, :, j, mi]
+            else:
+                keys = self._keys[i][:, :, j, mi]
             # C-order first-min == the scalar loop's (df outer, tile inner)
             # first-wins tie-break
             di, ti = divmod(int(np.argmin(keys)), nt)
-            best = (float(keys[di, ti]), tab.point_dataflow(di, ti),
-                    tab.metrics(di, ti, j, mi))
+            if not np.isfinite(keys[di, ti]):
+                best = None
+            else:
+                df_t = tab.point_dataflow(di, ti)
+                m = tab.metrics(di, ti, j, mi)
+                if fused:
+                    m = refused_metrics(self.graph.layers[i], df_t, self.cfg,
+                                        m, fused_in=fused_in,
+                                        fused_out=fused_out)
+                best = (float(keys[di, ti]), df_t, m)
         else:
             # scalar fallback: lattice disabled, or a layout outside the
             # search space (``fixed`` with an external baseline layout)
@@ -242,30 +360,49 @@ class NetworkPlanner:
             for df in self._dfs[i]:
                 for tiling in self._tilings[i]:
                     df_t = df.with_tiles(tiling) if tiling else df
+                    if fused and not fusion_feasible(
+                            wl, df_t, self.cfg, fused_in=fused_in,
+                            fused_out=fused_out):
+                        continue
                     m = evaluate(wl, df_t, layout, self.cfg, reorder=mode)
+                    if fused:
+                        m = refused_metrics(wl, df_t, self.cfg, m,
+                                            fused_in=fused_in,
+                                            fused_out=fused_out)
                     k = _metric_key(m, self.opts.objective)
                     if best is None or k < best[0]:
                         best = (k, df_t, m)
-            assert best is not None, f"no dataflow candidates for layer {i}"
+            assert best is not None or fused, \
+                f"no dataflow candidates for layer {i}"
         self._layer_memo[memo_key] = best
         return best
 
-    def step_choice(self, i: int, l_in: Layout, l_out: Layout) -> _StepChoice:
+    def step_choice(self, i: int, l_in: Layout, l_out: Layout,
+                    fused_in: bool = False, fused_out: bool = False
+                    ) -> Optional[_StepChoice]:
         """Best (dataflow, reorder mode) for layer i given both boundaries.
 
         Identity boundaries may still engage the reorder unit (its read-side
         conflict relief can beat the hop energy); changing boundaries must.
+        A fused output boundary can only switch layout on chip, so the
+        off-chip mode is excluded there; returns ``None`` when no feasible
+        fused execution exists.
         """
         same = l_in.name() == l_out.name()
         modes = (("none",) + self.opts.switch_modes) if same \
             else self.opts.switch_modes
         best: Optional[_StepChoice] = None
         for mode in modes:
-            k, df, m = self.layer_cost(i, l_in, mode)
+            res = self.layer_cost(i, l_in, mode, fused_in=fused_in,
+                                  fused_out=fused_out)
+            if res is None:
+                continue
+            k, df, m = res
             if best is None or k < best.key:
                 best = _StepChoice(dataflow=df, metrics=m, mode=mode, key=k,
-                                   tiles=df.tiles)
-        assert best is not None
+                                   tiles=df.tiles, fused_in=fused_in,
+                                   fused_out=fused_out)
+        assert best is not None or fused_in or fused_out
         return best
 
     def skip_penalty(self, src: int) -> Tuple[float, float]:
@@ -290,10 +427,19 @@ class NetworkPlanner:
         return (a.N, a.P, a.Q, a.M) == (b.N, b.P, b.Q, b.M)
 
     # ------------------------------------------------------------ path scoring
-    def extend(self, path: _Path, layer: int, l_out: Layout) -> _Path:
-        """Append layer ``layer`` with output boundary ``l_out``."""
+    def extend(self, path: _Path, layer: int, l_out: Layout,
+               fuse_out: bool = False) -> Optional[_Path]:
+        """Append layer ``layer`` with output boundary ``l_out``.
+
+        ``fuse_out`` declares the edge to the NEXT layer fused; the path's
+        ``fuse_next`` flag forces this layer to consume the previous
+        boundary on chip.  Returns ``None`` when no feasible fused
+        execution of the layer exists."""
         l_in = self._by_name[path.boundaries[-1]]
-        c = self.step_choice(layer, l_in, l_out)
+        c = self.step_choice(layer, l_in, l_out,
+                             fused_in=path.fuse_next, fused_out=fuse_out)
+        if c is None:
+            return None
         key = path.key + c.key
         cycles = path.cycles + c.metrics.cycles
         energy = path.energy_pj + c.metrics.energy_pj
@@ -314,15 +460,26 @@ class NetworkPlanner:
         return _Path(key=key, cycles=cycles, energy_pj=energy,
                      transition_cycles=trans,
                      boundaries=path.boundaries + (l_out.name(),),
-                     choices=path.choices + (c,))
+                     choices=path.choices + (c,), fuse_next=fuse_out)
 
     def score_boundaries(self, boundaries: Sequence[str]) -> _Path:
-        """Score a full boundary-layout assignment (len = n_layers + 1)."""
+        """Score a full boundary-layout assignment (len = n_layers + 1),
+        unfused — the greedy/fixed/brute-force baselines."""
         assert len(boundaries) == len(self.graph) + 1
         path = _Path(0.0, 0.0, 0.0, 0.0, (boundaries[0],), ())
         for i, b in enumerate(boundaries[1:]):
-            path = self.extend(path, i, self._by_name[b])
+            nxt = self.extend(path, i, self._by_name[b])
+            assert nxt is not None   # unfused extension always exists
+            path = nxt
         return path
+
+    def _fuse_options(self, layer: int) -> Tuple[bool, ...]:
+        """Whether layer ``layer``'s output edge may be declared fused: never
+        for the last layer (its output leaves the chip) or a skip-edge
+        source (the tensor is re-consumed later and must be materialized)."""
+        if self.opts.fuse_layers and layer not in self._no_fuse_out:
+            return (False, True)
+        return (False,)
 
     # ----------------------------------------------------------------- planners
     def plan(self) -> ExecutionPlan:
@@ -344,22 +501,32 @@ class NetworkPlanner:
                     _Path(0.0, 0.0, 0.0, 0.0, (l.name(),), ())
                     for l in self.layouts]
                 for i in range(len(self.graph)):
-                    grown = [self.extend(p, i, l_out)
-                             for p in beams for l_out in self.layouts]
+                    grown = [g for p in beams for l_out in self.layouts
+                             for fo in self._fuse_options(i)
+                             if (g := self.extend(p, i, l_out, fo))
+                             is not None]
                     grown.sort(key=lambda p: p.key)
                     kept: List[_Path] = []
-                    seen_last: Dict[str, int] = {}
-                    # keep the best few per terminal state, best-first overall
+                    seen_last: Dict[Tuple[str, bool], int] = {}
+                    # keep the best few per terminal state, best-first
+                    # overall; a fused-pending path is a distinct DP state
+                    # (its next layer is constrained), so it gets its own
+                    # per-state quota instead of competing with unfused ones
                     per_state = max(1,
                                     self.opts.beam_width // len(self.layouts))
                     for p in grown:
-                        last = p.boundaries[-1]
+                        last = (p.boundaries[-1], p.fuse_next)
                         if seen_last.get(last, 0) >= per_state:
                             continue
                         seen_last[last] = seen_last.get(last, 0) + 1
                         kept.append(p)
                         if len(kept) >= self.opts.beam_width:
                             break
+                    if all(p.fuse_next for p in kept):
+                        # a fused-pending path may have no feasible next
+                        # layer; never let the beam strand itself
+                        kept.append(min((p for p in grown if not p.fuse_next),
+                                        key=lambda p: p.key))
                     beams = kept
             with obs.span("planner.argmin"):
                 best = min(beams, key=lambda p: p.key)
@@ -441,7 +608,10 @@ class NetworkPlanner:
                 kernel="rir_matmul", epilogue_perm=perm, lowering=lowering,
                 joins=joins, cycles=choice.metrics.cycles,
                 energy_pj=choice.metrics.energy_pj, tiles=choice.tiles,
-                double_buffer=choice.dataflow.double_buffer))
+                double_buffer=choice.dataflow.double_buffer,
+                buffer_alloc=choice.dataflow.buffer_alloc,
+                fused_with=(i + 1) if choice.fused_out else None,
+                dram_stall_cycles=choice.metrics.dram_stall_cycles))
         return ExecutionPlan(
             graph_name=self.graph.name, graph_hash=self.graph.graph_hash(),
             config_key=config_key(self.cfg, self.opts.key()),

@@ -15,13 +15,16 @@ import pytest
 
 from repro.core.conflicts import (assess_iact_conflicts,
                                   assess_iact_conflicts_grid)
-from repro.core.dataflow import (PING_PONG, ConvWorkload,
+from repro.core.dataflow import (BUFFER_TENSORS, PING_PONG, ConvWorkload,
                                  enumerate_dataflows, enumerate_tilings,
-                                 tile_extents, tile_working_set)
+                                 ping_pong_tag, tile_extents,
+                                 tile_footprint_split, tile_traffic_split,
+                                 tile_working_set)
 from repro.core.layout import Layout, conv_layout_space
 from repro.core.layoutloop import (EvalConfig, cosearch_layer, evaluate,
                                    evaluate_lattice, exposed_stall_cycles,
-                                   network_eval, reorder_overhead,
+                                   fusion_feasible, network_eval,
+                                   refused_metrics, reorder_overhead,
                                    tile_dram_terms)
 from repro.core.nest import NestConfig
 from repro.plan import (NetworkPlanner, PlannerOptions, bert_graph,
@@ -324,6 +327,204 @@ def test_single_buffered_matches_pr4_golden_fixture():
                  e["layout"], e["mode"], field)
 
 
+def test_uniform_double_buffered_matches_pr5_golden_fixture():
+    """Acceptance: uniform ping-pong points reproduce the PR 5 cost model
+    bit-for-bit after the per-tensor refactor — every Metrics field of every
+    fixture point, captured from the pre-refactor code, must come back
+    identical (repr-exact)."""
+    import json
+    import pathlib
+
+    from repro.core.dataflow import Dataflow
+
+    path = pathlib.Path(__file__).parent / "goldens" / \
+        "tile_dram_pr4_fixture.json"
+    data = json.loads(path.read_text())
+    cfg = EvalConfig(nest=NestConfig(**data["nest"]))
+    assert len(data["entries_pr5"]) > 150
+    for e in data["entries_pr5"]:
+        wl = ConvWorkload(**e["workload"])
+        df = Dataflow(spatial=tuple((d, int(f)) for d, f in e["spatial"]))
+        df = df.with_tiles(tuple((d, int(v)) for d, v in e["tiles"])
+                           + ((PING_PONG, 1),))
+        assert df.double_buffer and not df.buffer_alloc
+        m = evaluate(wl, df, Layout.parse(e["layout"]), cfg,
+                     reorder=e["mode"])
+        for field, want in e["metrics"].items():
+            assert repr(getattr(m, field)) == want, \
+                (e["workload"]["name"], e["spatial"], e["tiles"],
+                 e["layout"], e["mode"], field)
+
+
+# ------------------------------------- per-tensor allocation + fused edges
+PROPER_SUBSETS = (("iact",), ("w",), ("oact",),
+                  ("iact", "w"), ("iact", "oact"), ("w", "oact"))
+
+
+def plain_dims(tiling, wl):
+    """A tiling entry's real-dim part: every ping-pong tag stripped."""
+    return tuple((d, v) for d, v in tiling if d in wl.dims())
+
+
+def assert_per_tensor_never_costlier(wl, cfg, rng) -> int:
+    """The per-tensor allocation property, for the SAME plain tiling:
+
+    * any proper-subset allocation whose claim (db tensors at 2x) still
+      fits the buffer is never costlier than the fully single-buffered
+      point — the sb tensors keep their serial charge while the db
+      subset's overlap can only hide cycles — and never moves the work
+      itself (compute and traffic unchanged when nothing spills);
+    * the planner's min over the allocation axis (which contains the
+      uniform all-three point) is never worse than the PR 5 uniform
+      capacity/2 split — so the enlarged lattice dominates by
+      construction;
+    * tagging all three tensors normalizes to the uniform point.
+
+    Returns the number of (tiling, subset) pairs actually checked.
+    """
+    cap_words = cfg.buffer.num_lines * cfg.buffer.line_size
+    dfs = list(enumerate_dataflows(wl, cfg.nest.aw * cfg.nest.ah))
+    df = dfs[int(rng.integers(len(dfs)))]
+    lay, mode = SMALL_LAYOUTS[0], "rir"
+    checked = 0
+    seen_plains = set()
+    for tiling in enumerate_tilings(wl, None, capacity_bytes(cfg),
+                                    cfg.dtype_bytes, per_tensor=True):
+        plain = plain_dims(tiling, wl)
+        if plain in seen_plains:
+            continue
+        seen_plains.add(plain)
+        df_sb = df.with_tiles(plain)
+        fp = tile_footprint_split(wl, tile_extents(wl, df_sb))
+        # all-three tags normalize to the uniform ping-pong point
+        all_tags = tuple((ping_pong_tag(t), 1) for t in BUFFER_TENSORS)
+        assert df.with_tiles(plain + all_tags) == \
+            df.with_tiles(plain + ((PING_PONG, 1),))
+        m_sb = evaluate(wl, df_sb, lay, cfg, reorder=mode)
+        best = m_sb.cycles
+        for subset in PROPER_SUBSETS:
+            claim = sum(fp[t] * (2 if t in subset else 1)
+                        for t in BUFFER_TENSORS)
+            if claim > cap_words:
+                continue   # infeasible allocation: the planner prunes it
+            df_pt = df.with_tiles(
+                plain + tuple((ping_pong_tag(t), 1) for t in subset))
+            assert df_pt.buffer_alloc == subset
+            assert not df_pt.double_buffer
+            m_pt = evaluate(wl, df_pt, lay, cfg, reorder=mode)
+            # the allocation repartitions the buffer, never the work
+            assert m_pt.compute_cycles == m_sb.compute_cycles
+            np.testing.assert_allclose(m_pt.dram_bytes, m_sb.dram_bytes,
+                                       rtol=1e-12)
+            # pipelining a subset only ever hides stall cycles
+            tol = 1e-9 * max(1.0, m_sb.cycles)
+            assert m_pt.dram_stall_cycles <= \
+                m_sb.dram_stall_cycles + tol, \
+                (wl.name, plain, subset)
+            assert m_pt.cycles <= m_sb.cycles + tol, (wl.name, plain, subset)
+            best = min(best, m_pt.cycles)
+            checked += 1
+        if _fits_half_buffer(wl, df_sb, cfg):
+            m_u = evaluate(wl, df.with_tiles(plain + ((PING_PONG, 1),)),
+                           lay, cfg, reorder=mode)
+            assert min(best, m_u.cycles) <= m_u.cycles, (wl.name, plain)
+    return checked
+
+
+def test_per_tensor_allocation_never_costlier_seeded():
+    """Satellite property: a per-tensor split is never costlier than the
+    uniform PR 5 split for the same tiling (the allocation axis only ever
+    ADDS dominated-or-better points to the lattice)."""
+    rng = np.random.default_rng(23)
+    cfg = EvalConfig(nest=NestConfig(aw=8, ah=8))
+    checked = 0
+    for _ in range(10):
+        checked += assert_per_tensor_never_costlier(
+            random_workload(rng), cfg, rng)
+    assert checked > 40, "property vacuous: too few feasible allocations"
+
+
+def assert_fused_edge_elides_boundary(wl, cfg, rng) -> int:
+    """The fused-boundary cost contract (``refused_metrics``): a fused
+    edge's cost equals the unfused cost minus the boundary tensor's DRAM
+    traffic term.
+
+    For every ``fusion_feasible`` lattice point, the fused variant must
+
+    * move EXACTLY the live tensors' traffic — the boundary tensor never
+      touches DRAM (feasible means the fused claim fits half the buffer,
+      so nothing spills and the elision is the whole per-tensor term);
+    * drop dram_bytes / energy by exactly that boundary term (the DRAM
+      energy model is linear in bytes, so the swap is exact);
+    * keep compute and reorder untouched, re-deriving only the exposed
+      stall from the fused pipeline terms.
+
+    Returns the number of (tiling, side) pairs actually checked.
+    """
+    dfs = list(enumerate_dataflows(wl, cfg.nest.aw * cfg.nest.ah))
+    df = dfs[int(rng.integers(len(dfs)))]
+    lay, mode = SMALL_LAYOUTS[0], "rir"
+    checked = 0
+    for tiling in enumerate_tilings(wl, None, capacity_bytes(cfg),
+                                    cfg.dtype_bytes, per_tensor=True):
+        df_t = df.with_tiles(tiling) if tiling else df
+        tr = tile_traffic_split(wl, tile_extents(wl, df_t))
+        m = None
+        for boundary, flags in (("oact", dict(fused_out=True)),
+                                ("iact", dict(fused_in=True))):
+            if not fusion_feasible(wl, df_t, cfg, **flags):
+                continue
+            if m is None:
+                m = evaluate(wl, df_t, lay, cfg, reorder=mode)
+            m_f = refused_metrics(wl, df_t, cfg, m, **flags)
+            t0 = tile_dram_terms(wl, df_t, cfg)
+            t1 = tile_dram_terms(wl, df_t, cfg, **flags)
+            live = [t for t in BUFFER_TENSORS if t != boundary]
+            assert t1.traffic_bytes == float(
+                sum(tr[t] for t in live) * cfg.dtype_bytes), \
+                (wl.name, tiling, boundary)
+            boundary_bytes = t0.traffic_bytes - t1.traffic_bytes
+            assert boundary_bytes >= 0.0
+            np.testing.assert_allclose(m.dram_bytes - m_f.dram_bytes,
+                                       boundary_bytes, rtol=1e-12)
+            np.testing.assert_allclose(
+                m.energy_pj - m_f.energy_pj,
+                cfg.energy.dram_bytes_pj(boundary_bytes), rtol=1e-9)
+            assert m_f.compute_cycles == m.compute_cycles
+            assert m_f.reorder_cycles == m.reorder_cycles
+            assert m_f.dram_stall_cycles == exposed_stall_cycles(
+                t1, m.compute_cycles)
+            assert m_f.cycles == m.compute_cycles + m.reorder_cycles \
+                + m_f.dram_stall_cycles
+            checked += 1
+    return checked
+
+
+def small_fusable_workload(rng: np.random.Generator) -> ConvWorkload:
+    """Late-network-shaped layers whose full boundary tensors can actually
+    pin inside half the buffer — where fusion is economically real."""
+    return ConvWorkload(N=1,
+                        M=int(rng.integers(4, 64)),
+                        C=int(rng.integers(4, 64)),
+                        P=int(rng.integers(4, 14)),
+                        Q=int(rng.integers(4, 14)),
+                        R=int(rng.choice([1, 3])),
+                        S=int(rng.choice([1, 3])),
+                        name="rand-fuse")
+
+
+def test_fused_edge_cost_equals_unfused_minus_boundary_seeded():
+    """Satellite property: a fused edge's cost equals the unfused cost
+    minus the boundary DRAM traffic term, exactly."""
+    rng = np.random.default_rng(29)
+    cfg = EvalConfig(nest=NestConfig(aw=8, ah=8))
+    checked = 0
+    for _ in range(12):
+        checked += assert_fused_edge_elides_boundary(
+            small_fusable_workload(rng), cfg, rng)
+    assert checked > 10, "property vacuous: too few fusion-feasible points"
+
+
 # ----------------------------------------------- enumerate_dataflows dedup
 def test_enumerate_dataflows_no_spatial_duplicates():
     """Regression: factor-1 dims used to slip past the dedup guard, yielding
@@ -358,6 +559,28 @@ if HAVE_HYPOTHESIS:
     def test_double_buffered_never_worse_hypothesis(m, c, p, q, r, seed):
         wl = ConvWorkload(M=m, C=c, P=p, Q=q, R=r, S=r, name="hyp-db")
         assert_double_buffer_never_worse(
+            wl, EvalConfig(nest=NestConfig(aw=8, ah=8)),
+            np.random.default_rng(seed))
+
+    @pytest.mark.slow
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(4, 256), st.integers(4, 256), st.integers(4, 32),
+           st.integers(4, 32), st.sampled_from([1, 3, 5]),
+           st.integers(0, 2**31 - 1))
+    def test_per_tensor_never_costlier_hypothesis(m, c, p, q, r, seed):
+        wl = ConvWorkload(M=m, C=c, P=p, Q=q, R=r, S=r, name="hyp-pt")
+        assert_per_tensor_never_costlier(
+            wl, EvalConfig(nest=NestConfig(aw=8, ah=8)),
+            np.random.default_rng(seed))
+
+    @pytest.mark.slow
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(4, 64), st.integers(4, 64), st.integers(4, 14),
+           st.integers(4, 14), st.sampled_from([1, 3]),
+           st.integers(0, 2**31 - 1))
+    def test_fused_edge_cost_identity_hypothesis(m, c, p, q, r, seed):
+        wl = ConvWorkload(M=m, C=c, P=p, Q=q, R=r, S=r, name="hyp-fuse")
+        assert_fused_edge_elides_boundary(
             wl, EvalConfig(nest=NestConfig(aw=8, ah=8)),
             np.random.default_rng(seed))
 
@@ -528,7 +751,8 @@ def test_mobv3_tiled_full_plan_under_wall_time_budget():
     """The tile axis multiplies the lattice by <= max_tilings+1; the full
     joint (dataflow x tile x layout x mode) mobv3 plan must stay interactive."""
     opts = PlannerOptions(switch_modes=("rir", "offchip"),
-                          parallel_dims=("C", "P", "Q"))
+                          parallel_dims=("C", "P", "Q"),
+                          per_tensor_buffers=False, fuse_layers=False)
     assert opts.search_tiles
     t0 = time.perf_counter()
     plan = NetworkPlanner(mobilenet_v3_graph(), EvalConfig(), opts).plan()
@@ -537,3 +761,23 @@ def test_mobv3_tiled_full_plan_under_wall_time_budget():
     assert any(s.tiles for s in plan.steps)
     assert elapsed < 120.0, \
         f"tiled mobv3 planning took {elapsed:.1f}s (budget 120s)"
+
+
+@pytest.mark.slow
+def test_mobv3_fused_full_plan_under_wall_time_budget():
+    """The per-tensor + fusion-headroom arms roughly double the tile axis
+    and the fusion DP doubles the boundary states; the full fused mobv3
+    plan must stay interactive (~11s measured standalone, ~37s inside the
+    loaded benchmark process — trajectory in BENCH_plan_speed.json's
+    plan_fused entries)."""
+    opts = PlannerOptions(switch_modes=("rir", "offchip"),
+                          parallel_dims=("C", "P", "Q"))
+    assert opts.per_tensor_buffers and opts.fuse_layers
+    t0 = time.perf_counter()
+    plan = NetworkPlanner(mobilenet_v3_graph(), EvalConfig(), opts).plan()
+    elapsed = time.perf_counter() - t0
+    assert len(plan.steps) == len(mobilenet_v3_graph())
+    assert any(s.fused_with is not None for s in plan.steps), \
+        "fused mobv3 plan chose no fused edge"
+    assert elapsed < 300.0, \
+        f"fused mobv3 planning took {elapsed:.1f}s (budget 300s)"

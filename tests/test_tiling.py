@@ -1,10 +1,12 @@
-"""Tile + double-buffer axes through the artifact + execution layers.
+"""Tile + buffer-allocation axes through the artifact + execution layers.
 
-Covers the plan schema v3 (tile- and ping-pong-carrying steps, v1/v2
-back-compat via the checked-in fixtures), the tile-derived kernel
-block/grid shapes (halved resident extents for double-buffered steps), and
-the batch-norm/bias fold through the executor's effective-weight hook
-point — all validated against the ``kernels/ref.py``-based oracles.
+Covers the plan schema v4 (per-tensor ``buffer_alloc``, ``fused_with``
+edges and ``dram_stall_cycles`` on steps; v1/v2/v3 back-compat via the
+checked-in fixtures), the tile-derived kernel block/grid shapes (halved
+resident iAct extents for double-buffered steps, power-of-two clamping
+with the Pallas sublane floor for small tiles), and the batch-norm/bias
+fold through the executor's effective-weight hook point — all validated
+against the ``kernels/ref.py``-based oracles.
 """
 import dataclasses
 import pathlib
@@ -14,7 +16,7 @@ import pytest
 
 import jax.numpy as jnp
 
-from repro.core.dataflow import ConvWorkload
+from repro.core.dataflow import ConvWorkload, tile_extents
 from repro.core.layout import Layout
 from repro.core.layoutloop import EvalConfig
 from repro.core.workloads import init_graph_weights
@@ -28,6 +30,7 @@ from repro.plan.plan import PLAN_VERSION, RIR_BLOCK
 
 FIXTURE_V1 = pathlib.Path(__file__).parent / "goldens" / "plan_v1_fixture.json"
 FIXTURE_V2 = pathlib.Path(__file__).parent / "goldens" / "plan_v2_fixture.json"
+FIXTURE_V3 = pathlib.Path(__file__).parent / "goldens" / "plan_v3_fixture.json"
 SMALL_LAYOUTS = tuple(Layout.parse(s)
                       for s in ("HWC_C32", "HWC_H32", "HWC_C4W8"))
 OPTS = dict(layouts=SMALL_LAYOUTS, parallel_dims=("C", "P", "Q"))
@@ -67,24 +70,70 @@ def test_v2_fixture_loads_single_buffered():
     assert again == plan
 
 
-def test_v3_plan_carries_tiles_and_double_buffer_through_json():
+def test_v3_fixture_loads_unfused_uniform():
+    """A checked-in pre-fusion (version 3) artifact must load with every
+    step unfused and uniform-buffered — no ``fused_with`` edges, no
+    per-tensor ``buffer_alloc``, zero modeled stall — and round-trip
+    losslessly (as a v4 artifact)."""
+    plan = ExecutionPlan.from_json(FIXTURE_V3.read_text())
+    assert plan.version == 3
+    assert all(s.fused_with is None for s in plan.steps)
+    assert all(s.buffer_alloc == () for s in plan.steps)
+    assert all(s.dataflow.buffer_alloc == () for s in plan.steps)
+    assert all(s.dram_stall_cycles == 0.0 for s in plan.steps)
+    assert any(s.double_buffer for s in plan.steps), \
+        "fixture should carry a ping-pong step"
+    again = ExecutionPlan.from_json(plan.to_json())
+    assert again == plan
+
+
+def test_v4_plan_carries_tiles_and_buffer_alloc_through_json():
     graph = from_layers([
         ConvWorkload(M=256, C=128, P=14, Q=14, R=3, S=3, name="big"),
         ConvWorkload(M=128, C=256, P=14, Q=14, R=1, S=1, name="pw"),
     ], "two")
     plan = tiled_plan(graph)
-    assert plan.version == PLAN_VERSION == 3
+    assert plan.version == PLAN_VERSION == 4
     assert any(s.tiles for s in plan.steps), "no layer chose a tiling"
-    assert any(s.double_buffer for s in plan.steps), \
-        "no layer chose the ping-pong tiling"
+    assert any(s.double_buffer or s.buffer_alloc for s in plan.steps), \
+        "no layer chose any ping-pong buffering"
     for s in plan.steps:
         assert s.tiles == s.dataflow.tiles
         assert s.double_buffer == s.dataflow.double_buffer
+        assert s.buffer_alloc == s.dataflow.buffer_alloc
     loaded = ExecutionPlan.from_json(plan.to_json())
     assert loaded == plan
     assert [s.tiles for s in loaded.steps] == [s.tiles for s in plan.steps]
     assert [s.double_buffer for s in loaded.steps] == \
         [s.double_buffer for s in plan.steps]
+    assert [s.buffer_alloc for s in loaded.steps] == \
+        [s.buffer_alloc for s in plan.steps]
+    assert [s.fused_with for s in loaded.steps] == \
+        [s.fused_with for s in plan.steps]
+    assert [s.dram_stall_cycles for s in loaded.steps] == \
+        [s.dram_stall_cycles for s in plan.steps]
+
+
+def test_v4_fused_plan_roundtrips_fused_edges():
+    """A plan whose DP actually fuses an edge must serialize the edge and
+    the per-step stall share and reload identically."""
+    fused = tiled_plan(from_layers([
+        ConvWorkload(M=32, C=16, P=8, Q=8, R=1, S=1, name="a"),
+        ConvWorkload(M=16, C=32, P=8, Q=8, R=1, S=1, name="b"),
+    ], "pair"))
+    steps = fused.steps
+    # force a fused edge if the tiny pair's DP did not pick one (cheap
+    # nets can be DRAM-free already); serialization must carry it anyway
+    if all(s.fused_with is None for s in steps):
+        steps = (dataclasses.replace(steps[0], fused_with=1,
+                                     dram_stall_cycles=12.5),) + steps[1:]
+        fused = dataclasses.replace(fused, steps=steps)
+    loaded = ExecutionPlan.from_json(fused.to_json())
+    assert loaded == fused
+    assert [s.fused_with for s in loaded.steps] == \
+        [s.fused_with for s in steps]
+    assert [s.dram_stall_cycles for s in loaded.steps] == \
+        [s.dram_stall_cycles for s in steps]
 
 
 def test_unknown_plan_version_rejected():
@@ -100,28 +149,59 @@ def test_step_kernel_blocks_follow_the_tile():
     plan = tiled_plan(graph)
     step = plan.steps[0]
     bm, bk = step_kernel_blocks(step)
-    assert MIN_KERNEL_BLOCK <= bm <= RIR_BLOCK
-    assert MIN_KERNEL_BLOCK <= bk <= RIR_BLOCK
+    assert 8 <= bm <= RIR_BLOCK       # 8 = Pallas f32 sublane floor
+    assert 8 <= bk <= RIR_BLOCK
     # tile-less single-buffered steps keep the full hardcoded block (v1)
-    untiled = dataclasses.replace(step, tiles=(), double_buffer=False)
+    untiled = dataclasses.replace(step, tiles=(), double_buffer=False,
+                                  buffer_alloc=())
     assert step_kernel_blocks(untiled) == (RIR_BLOCK, RIR_BLOCK)
-    # a small tile shrinks the grid blocks (floored at MIN_KERNEL_BLOCK)
-    tiny = dataclasses.replace(
-        step, tiles=(("M", 16), ("C", 8), ("P", 2), ("Q", 2)),
-        double_buffer=False)
-    assert step_kernel_blocks(tiny) == (MIN_KERNEL_BLOCK, MIN_KERNEL_BLOCK)
-    wide = dataclasses.replace(step, tiles=(("C", 64),), double_buffer=False)
+    wide = dataclasses.replace(step, tiles=(("C", 64),), double_buffer=False,
+                               buffer_alloc=())
     assert step_kernel_blocks(wide) == (RIR_BLOCK, RIR_BLOCK)
-    # ping-pong halves the resident extents before the pow-2 floor: a tile
-    # that pins the full block single-buffered drops one power of two
+    # ping-pong halves the resident iAct extents before the pow-2 clamp: a
+    # tile that pins the full block single-buffered drops one power of two
     assert step_kernel_blocks(dataclasses.replace(
         wide, double_buffer=True)) == (MIN_KERNEL_BLOCK, RIR_BLOCK)
+    # ... and a per-tensor allocation halves iff iActs are in the subset
+    assert step_kernel_blocks(dataclasses.replace(
+        wide, buffer_alloc=("iact",))) == (MIN_KERNEL_BLOCK, RIR_BLOCK)
+    assert step_kernel_blocks(dataclasses.replace(
+        wide, buffer_alloc=("w", "oact"))) == (RIR_BLOCK, RIR_BLOCK)
     pinned = dataclasses.replace(
-        step, tiles=(("C", 32), ("P", 14), ("Q", 14)), double_buffer=False)
+        step, tiles=(("C", 32), ("P", 14), ("Q", 14)), double_buffer=False,
+        buffer_alloc=())
     halved = dataclasses.replace(pinned, double_buffer=True)
     bm_sb, bk_sb = step_kernel_blocks(pinned)
     bm_db, bk_db = step_kernel_blocks(halved)
     assert bm_db <= bm_sb and bk_db <= bk_sb
+
+
+def test_step_kernel_blocks_clamp_to_small_tiles():
+    """Regression (small-tile clamping): blocks used to silently round UP
+    to MIN_KERNEL_BLOCK even when the tile itself was smaller, so a tiny
+    tile got a (64, 64) grid block over mostly-padding rows.  The clamp
+    now follows the tile down to the Pallas f32 sublane floor of 8 and
+    never exceeds the next power of two above the resident extent."""
+    wl = ConvWorkload(M=256, C=256, P=14, Q=14, R=3, S=3, name="l")
+    graph = from_layers([wl], "one")
+    step = tiled_plan(graph).steps[0]
+    # rows = P*Q tile = 4, kdim = 8*3*3 = 72: clamp to (8, 64), not (64, 64)
+    tiny = dataclasses.replace(
+        step, tiles=(("M", 16), ("C", 8), ("P", 2), ("Q", 2)),
+        double_buffer=False, buffer_alloc=())
+    assert step_kernel_blocks(tiny) == (8, MIN_KERNEL_BLOCK)
+    # blocks never exceed the next power of two above the resident extent
+    for tiles in ((("P", 2), ("Q", 2)), (("M", 8), ("C", 4)),
+                  (("C", 8), ("P", 4), ("Q", 4))):
+        s = dataclasses.replace(step, tiles=tiles, double_buffer=False,
+                                buffer_alloc=())
+        bm, bk = step_kernel_blocks(s)
+        ext = tile_extents(wl, s.dataflow.with_tiles(tiles))
+        rows = ext["N"] * ext["P"] * ext["Q"]
+        kdim = ext["C"] * wl.R * wl.S
+        assert bm <= max(8, 1 << (rows - 1).bit_length())
+        assert bk <= max(8, 1 << (kdim - 1).bit_length())
+        assert bm >= 8 and bk >= 8
 
 
 def test_tiled_plan_executes_bit_identical_to_untiled():

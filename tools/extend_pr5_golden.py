@@ -1,0 +1,85 @@
+"""One-shot: capture PR 5 uniform double-buffered goldens with the
+pre-refactor cost model, plus a v3 plan fixture, BEFORE the per-tensor
+buffer-allocation refactor lands.  Run from the repo root with
+PYTHONPATH=src.  Kept in tools/ for provenance; the outputs are the
+checked-in goldens."""
+import json
+import pathlib
+
+from repro.core.dataflow import (ConvWorkload, Dataflow, PING_PONG,
+                                 enumerate_tilings)
+from repro.core.layout import Layout
+from repro.core.layoutloop import EvalConfig, NestConfig, evaluate
+from repro.plan import NetworkPlanner, PlannerOptions, from_layers
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+FIXTURE = ROOT / "tests" / "goldens" / "tile_dram_pr4_fixture.json"
+PLAN_FIXTURE = ROOT / "tests" / "goldens" / "plan_v3_fixture.json"
+
+METRIC_FIELDS = ("cycles", "compute_cycles", "reorder_cycles", "slowdown",
+                 "utilization", "energy_pj", "dram_bytes", "line_reads",
+                 "pj_per_mac", "dram_stall_cycles")
+
+
+def main():
+    data = json.loads(FIXTURE.read_text())
+    cfg = EvalConfig(nest=NestConfig(**data["nest"]))
+    cap = cfg.buffer.num_lines * cfg.buffer.line_size * cfg.dtype_bytes
+    workloads = {}
+    spatials, layouts, modes = [], [], []
+    for e in data["entries"]:
+        workloads.setdefault(e["workload"]["name"], e["workload"])
+        for seq, item in ((spatials, tuple(map(tuple, e["spatial"]))),
+                          (layouts, e["layout"]), (modes, e["mode"])):
+            if item not in seq:
+                seq.append(item)
+
+    entries = []
+    for name, wld in workloads.items():
+        wl = ConvWorkload(**wld)
+        for spatial in spatials:
+            df = Dataflow(spatial=tuple((d, int(f)) for d, f in spatial))
+            tagged = [t for t in enumerate_tilings(wl, df, cap)
+                      if any(d == PING_PONG for d, _ in t)][:2]
+            for tiles in tagged:
+                dft = df.with_tiles(tiles)
+                assert dft.double_buffer
+                for layout in layouts:
+                    for mode in modes:
+                        m = evaluate(wl, dft, Layout.parse(layout), cfg,
+                                     reorder=mode)
+                        entries.append({
+                            "workload": wld,
+                            "spatial": [list(p) for p in spatial],
+                            "tiles": [list(p) for p in tiles],
+                            "layout": layout,
+                            "mode": mode,
+                            "metrics": {f: repr(getattr(m, f))
+                                        for f in METRIC_FIELDS},
+                        })
+    data["note_pr5"] = ("PR5 uniform double-buffered evaluate() numbers; "
+                       "uniform ping-pong points must reproduce these "
+                       "exactly through the per-tensor tile_dram_terms")
+    data["entries_pr5"] = entries
+    FIXTURE.write_text(json.dumps(data, indent=1) + "\n")
+    print(f"entries={len(data['entries'])} entries_pr5={len(entries)}")
+
+    # v3 plan fixture: tiled + double-buffered plan from the current writer
+    graph = from_layers([
+        ConvWorkload(M=256, C=128, P=14, Q=14, R=3, S=3, name="big"),
+        ConvWorkload(M=128, C=256, P=14, Q=14, R=1, S=1, name="pw"),
+    ], "two")
+    small = tuple(Layout.parse(s)
+                  for s in ("HWC_C32", "HWC_H32", "HWC_C4W8"))
+    opts = PlannerOptions(switch_modes=("rir",), layouts=small,
+                          parallel_dims=("C", "P", "Q"))
+    plan = NetworkPlanner(graph, EvalConfig(), opts).plan()
+    assert plan.version == 3
+    assert any(s.tiles for s in plan.steps)
+    assert any(s.double_buffer for s in plan.steps)
+    PLAN_FIXTURE.write_text(plan.to_json())
+    print(f"plan fixture: {len(plan.steps)} steps, version {plan.version}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,4 @@
+# check: ignore-file[api-boundary]  (paper-figure/perf benchmark: deliberately exercises core internals)
 """Fig. 10 — irregular GEMM utilization: FEATHER (BIRRD cross-column
 reduction) vs a rigid weight-stationary systolic array."""
 from __future__ import annotations

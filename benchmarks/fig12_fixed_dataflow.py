@@ -1,3 +1,4 @@
+# check: ignore-file[api-boundary]  (paper-figure/perf benchmark: deliberately exercises core internals)
 """Fig. 12 — FEATHER vs fixed-dataflow end-to-end designs (Gemmini/DPU-like).
 
 Per-layer normalized throughput on ResNet-50: the fixed designs lose

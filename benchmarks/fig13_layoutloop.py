@@ -1,3 +1,4 @@
+# check: ignore-file[api-boundary]  (paper-figure/perf benchmark: deliberately exercises core internals)
 """Fig. 13 — Layoutloop comparison: FEATHER vs NVDLA / Eyeriss / SIGMA
 variants (fixed layouts, off-chip reorder, line rotation, transpose,
 row-reorder) on BERT / ResNet-50 / MobileNet-V3."""

@@ -1,3 +1,4 @@
+# check: ignore-file[api-boundary]  (paper-figure/perf benchmark: deliberately exercises core internals)
 """Fig. 14a + Tab. V — reduction-network and FEATHER area/power scaling."""
 from __future__ import annotations
 

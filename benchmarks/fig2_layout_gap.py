@@ -1,3 +1,4 @@
+# check: ignore-file[api-boundary]  (paper-figure/perf benchmark: deliberately exercises core internals)
 """Fig. 2 — theory/practice latency gap from ignoring layout.
 
 Four bars over ResNet-50 on a 16x16 array:

@@ -1,3 +1,4 @@
+# check: ignore-file[api-boundary]  (paper-figure/perf benchmark: deliberately exercises core internals)
 """Fig. 4 — the M1..M8 (workload x dataflow x layout) mapping table on a
 weight-stationary 4x4 systolic array: theoretical vs practical utilization.
 """

@@ -1,3 +1,4 @@
+# check: ignore-file[api-boundary]  (paper-figure/perf benchmark: deliberately exercises core internals)
 """Fig. plan — network-planned dataflow/layout switching.
 
 Compares six schedules on ResNet-50 / MobileNet-V3 / BERT, on two hardware

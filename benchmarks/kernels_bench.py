@@ -1,3 +1,4 @@
+# check: ignore-file[api-boundary]  (paper-figure/perf benchmark: deliberately exercises core internals)
 """Kernel microbenches — wall time of the jit'd XLA reference paths on CPU
 (the Pallas interpret path measures Python, not hardware) + arithmetic
 intensity bookkeeping for the roofline narrative."""

@@ -1,3 +1,4 @@
+# check: ignore-file[api-boundary]  (paper-figure/perf benchmark: deliberately exercises core internals)
 """Plan-speed benchmark — the batched lattice engine's perf trajectory.
 
 Times (1) ``evaluate_lattice`` against the equivalent scalar ``evaluate``

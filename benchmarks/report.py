@@ -1,3 +1,4 @@
+# check: ignore-file[api-boundary]  (paper-figure/perf benchmark: deliberately exercises core internals)
 """Generate the EXPERIMENTS.md §Dry-run + §Roofline tables from results/."""
 from __future__ import annotations
 

@@ -1,3 +1,4 @@
+# check: ignore-file[api-boundary]  (paper-figure/perf benchmark: deliberately exercises core internals)
 """Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
 
 Reads results/dryrun/*.json (written by repro.launch.dryrun) and derives the

@@ -1,3 +1,4 @@
+# check: ignore-file[api-boundary]  (pedagogical walkthrough of the internals the facade wraps)
 """The paper's core feature, end to end: per-layer (dataflow, layout)
 co-switching with Reorder-In-Reduction — planned across the whole network.
 

@@ -7,12 +7,9 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCH_IDS, get_config
-from repro.data import DataConfig, SyntheticLMStream
-from repro.distributed.stepfn import make_train_step
-from repro.launch.mesh import make_local_mesh
-from repro.models import build_model
-from repro.optim import adamw_init
+from repro.api import (ARCH_IDS, DataConfig, SyntheticLMStream, adamw_init,
+                       build_model, get_config, make_local_mesh,
+                       make_train_step)
 
 
 def main():

@@ -14,8 +14,7 @@ import time
 
 import numpy as np
 
-from repro.api import ServeConfig, ServeEngine
-from repro.configs import ARCH_IDS
+from repro.api import ARCH_IDS, ServeConfig, ServeEngine, get_config
 
 
 def main():
@@ -31,7 +30,6 @@ def main():
                          prompt_len=args.prompt_len, gen=args.gen)
     rng = np.random.default_rng(0)
     with ServeEngine(config) as eng:
-        from repro.configs import get_config
         vocab = get_config(args.arch, smoke=True).vocab
         prompts = [rng.integers(0, vocab, size=args.prompt_len)
                    .astype(np.int32) for _ in range(args.requests)]

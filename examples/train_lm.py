@@ -15,14 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
-from repro.configs import get_config
-from repro.data import DataConfig, SyntheticLMStream
-from repro.distributed.stepfn import make_train_step
-from repro.launch.mesh import make_local_mesh
-from repro.models import build_model
-from repro.optim import adamw_init, wsd_schedule
-from repro.runtime import TrainSupervisor
+from repro.api import (CheckpointManager, DataConfig, SyntheticLMStream,
+                       TrainSupervisor, adamw_init, build_model, get_config,
+                       make_local_mesh, make_train_step, wsd_schedule)
 
 
 def main():

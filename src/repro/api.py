@@ -25,16 +25,25 @@ from __future__ import annotations
 from typing import Callable, Optional, Sequence, Set
 
 # ---- re-exported classes (stable: constructor + documented attrs) --------
+from repro.checkpoint import CheckpointManager
+from repro.configs import ARCH_IDS, get_config
 from repro.core.layout import Layout
 from repro.core.layoutloop import EvalConfig
+from repro.data import DataConfig, SyntheticLMStream, make_stream
+from repro.distributed.stepfn import make_train_step
+from repro.launch.mesh import make_local_mesh
+from repro.models import build_model
+from repro.optim import adamw_init, adamw_update, wsd_schedule
 from repro.plan import (ExecutionPlan, LayerGraph, PlanCache, PlannerOptions,
                         PreparedNetwork, ResolvedPlan, from_arch_config,
-                        from_layers, mobilenet_v3_graph, resnet50_graph)
+                        from_layers, mobilenet_v3_graph, resnet50_graph,
+                        step_kernel_blocks)
 from repro.plan import execute_network_reference, prepare_network
 from repro.plan import resolve_plan as _resolve_plan
 from repro.plan import upgrade_plan as _upgrade_plan
 from repro.plan import plan_network as _plan_network
 from repro.plan import execute_network as _execute_network
+from repro.runtime import TrainSupervisor
 from repro.serve import QueueFullError, ServeConfig, ServeEngine, ServeTicket
 
 from repro import obs as _obs
@@ -97,8 +106,15 @@ __all__ = [
     # execution
     "PreparedNetwork", "prepare_network", "execute_network",
     "execute_network_reference",
+    "step_kernel_blocks",
     # serving
     "ServeEngine", "ServeConfig", "ServeTicket", "QueueFullError",
+    # model zoo + configs (the app-building surface)
+    "ARCH_IDS", "get_config", "build_model",
+    # training loop: data, step function, optimizer, mesh, checkpoints
+    "DataConfig", "SyntheticLMStream", "make_stream", "make_train_step",
+    "make_local_mesh", "adamw_init", "adamw_update", "wsd_schedule",
+    "CheckpointManager", "TrainSupervisor",
     # deprecation helper (for legacy shims, not applications)
     "warn_deprecated",
 ]

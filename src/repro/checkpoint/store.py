@@ -96,7 +96,7 @@ def save_pytree(tree: Pytree, directory: str | pathlib.Path) -> None:
     (tmp / "COMMIT").write_text("ok")
     # the kill-between-write-and-rename point: everything (COMMIT included)
     # is in the temp dir; a fault here leaves the previous checkpoint intact
-    faults.site("ckpt.write")
+    faults.site(faults.CKPT_WRITE)
     if d.exists():
         shutil.rmtree(d)
     os.replace(tmp, d)
@@ -113,7 +113,7 @@ def restore_pytree(template: Pytree, directory: str | pathlib.Path,
     import io
 
     d = pathlib.Path(directory)
-    faults.site("ckpt.read")
+    faults.site(faults.CKPT_READ)
     if not (d / "COMMIT").exists():
         raise FileNotFoundError(f"no committed checkpoint at {d}")
     digests = {}
@@ -212,7 +212,7 @@ class CheckpointManager:
             try:
                 self._retry(
                     lambda: save_pytree(tree, self.root / f"step_{step:08d}"),
-                    site="ckpt.write")
+                    site=faults.CKPT_WRITE)
                 self._gc()
             except faults.STEP_FAULT_TYPES as e:
                 # drop the save, keep the thread (and the previous good
@@ -247,7 +247,7 @@ class CheckpointManager:
                 tree = self._retry(
                     lambda: restore_pytree(
                         template, self.root / f"step_{step:08d}", shardings),
-                    site="ckpt.read")
+                    site=faults.CKPT_READ)
             except faults.STEP_FAULT_TYPES as e:
                 obs.inc_counter("ckpt.restore_failed", type=type(e).__name__)
                 log.warning("restore of step %d failed (%s: %s); trying "

@@ -1,3 +1,4 @@
+# check: ignore-file[api-boundary]  (operator dev tool: inspects internals by design)
 import os
 os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=512 "

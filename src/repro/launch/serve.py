@@ -36,10 +36,9 @@ def _plan_for(cfg, args):
     from repro import api
 
     api.warn_deprecated("repro.launch.serve._plan_for", "resolve_plan")
-    from repro.plan import PlannerOptions, from_arch_config
-
-    graph = from_arch_config(cfg, seq=args.prompt_len + args.gen)
-    opts = PlannerOptions(switch_modes=("rir",), parallel_dims=("C", "P", "Q"))
+    graph = api.from_arch_config(cfg, seq=args.prompt_len + args.gen)
+    opts = api.PlannerOptions(switch_modes=("rir",),
+                              parallel_dims=("C", "P", "Q"))
     return api.resolve_plan(graph, api.EvalConfig(), opts=opts,
                             cache=api.PlanCache(), artifact=args.plan,
                             deadline_s=args.plan_deadline)
@@ -49,7 +48,7 @@ def _decode_block_hints(plan):
     """Distinct kernel (block_m, block_k) shapes the plan's steps ask for —
     advisory, logged so an operator can see what a plan-driven decode
     would use."""
-    from repro.plan import step_kernel_blocks
+    from repro.api import step_kernel_blocks
 
     return sorted({step_kernel_blocks(s) for s in plan.steps})
 
@@ -73,7 +72,7 @@ def main() -> None:
         if config.arch is not None:
             import jax
 
-            from repro.configs import get_config
+            from repro.api import get_config
 
             cfg = get_config(config.arch, smoke=config.smoke)
             _, data_key = jax.random.split(jax.random.PRNGKey(config.seed))

@@ -1,3 +1,4 @@
+# check: ignore-file[api-boundary]  (operator dev tool: inspects internals by design)
 """ShapeDtypeStruct stand-ins for every model input (no device allocation)."""
 from __future__ import annotations
 

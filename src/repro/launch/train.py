@@ -48,13 +48,9 @@ def main() -> None:
     if args.log_level:
         obs.set_level(args.log_level)
 
-    from repro.checkpoint import CheckpointManager
-    from repro.configs import get_config
-    from repro.data import DataConfig, SyntheticLMStream
-    from repro.distributed.stepfn import make_train_step
-    from repro.launch.mesh import make_local_mesh
-    from repro.models import build_model
-    from repro.optim import adamw_init, wsd_schedule
+    from repro.api import (CheckpointManager, DataConfig, SyntheticLMStream,
+                           adamw_init, build_model, get_config,
+                           make_local_mesh, make_train_step, wsd_schedule)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)

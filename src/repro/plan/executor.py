@@ -329,7 +329,7 @@ class PreparedPlan:
             cur = apply_block_perm(x, perms[0], block) \
                 if len(perms[0]) > 1 else x
             for i, (step, w_eff) in enumerate(zip(plan.steps, self.w_eff)):
-                faults.site("exec.dispatch")
+                faults.site(faults.EXEC_DISPATCH)
                 if traced:
                     t0 = obs.now_us()
                 out_perm = perms[i + 1]
@@ -776,7 +776,7 @@ class PreparedNetwork:
             last = len(self.steps) - 1
             t0 = None
             for i, st in enumerate(self.steps):
-                faults.site("exec.dispatch")
+                faults.site(faults.EXEC_DISPATCH)
                 if traced and self._group_start[i] == i:
                     t0 = obs.now_us()
                 if st.row_map is None:

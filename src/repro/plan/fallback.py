@@ -145,7 +145,7 @@ def resolve_plan(graph: LayerGraph, cfg: EvalConfig,
             if save_back and artifact is not None:
                 try:
                     _retry(lambda: plan.save(pathlib.Path(artifact)),
-                           site="plan.save")
+                           site=faults.PLAN_SAVE)
                 except Exception as e:   # noqa: BLE001 — save-back is best-effort
                     log.warning("plan save-back failed (%s: %s)",
                                 type(e).__name__, e)
@@ -157,7 +157,7 @@ def resolve_plan(graph: LayerGraph, cfg: EvalConfig,
         if p.exists():
             try:
                 pinned = _retry(lambda: ExecutionPlan.load(p),
-                                site="plan.load")
+                                site=faults.PLAN_LOAD)
                 if (pinned.graph_hash, pinned.config_key) == (ghash, ck):
                     cache.put(pinned)
                 else:
@@ -180,11 +180,11 @@ def resolve_plan(graph: LayerGraph, cfg: EvalConfig,
     else:
         try:
             def _full() -> ExecutionPlan:
-                faults.site("plan.replan")   # injection point: planner down
+                faults.site(faults.PLAN_REPLAN)   # injection point: planner down
                 if planner_fn is not None:
                     return planner_fn(graph, cfg, opts)
                 return NetworkPlanner(graph, cfg, opts).plan()
-            plan = _retry(_full, site="plan.replan")
+            plan = _retry(_full, site=faults.PLAN_REPLAN)
             return _done(plan, 1)
         except Exception as e:   # noqa: BLE001 — ladder absorbs, descends
             fails.append(f"replanned: {type(e).__name__}: {e}")
@@ -198,11 +198,11 @@ def resolve_plan(graph: LayerGraph, cfg: EvalConfig,
         try:
             if greedy_fn is not None:
                 plan = _retry(lambda: greedy_fn(graph, cfg, opts),
-                              site="plan.greedy")
+                              site=faults.PLAN_GREEDY)
             else:
                 plan = _retry(
                     lambda: NetworkPlanner(graph, cfg, opts).greedy(),
-                    site="plan.greedy")
+                    site=faults.PLAN_GREEDY)
             return _done(plan, 2)
         except Exception as e:   # noqa: BLE001
             fails.append(f"greedy: {type(e).__name__}: {e}")
@@ -248,13 +248,13 @@ def upgrade_plan(graph: LayerGraph, cfg: EvalConfig,
             return ResolvedPlan(plan=plan, tier=0)
 
     def _replan() -> ExecutionPlan:
-        faults.site("plan.replan")   # same injection point as resolve_plan
+        faults.site(faults.PLAN_REPLAN)   # same injection point as resolve_plan
         if planner_fn is not None:
             return planner_fn(graph, cfg, opts)
         return NetworkPlanner(graph, cfg, opts).plan()
 
     try:
-        plan = retry_call(_replan, site="plan.replan", policy=policy,
+        plan = retry_call(_replan, site=faults.PLAN_REPLAN, policy=policy,
                           sleep=sleep, clock=clock)
     except Exception as e:   # noqa: BLE001 — not-yet, the caller retries later
         log.warning("plan upgrade attempt failed (%s: %s); still degraded",
@@ -267,7 +267,7 @@ def upgrade_plan(graph: LayerGraph, cfg: EvalConfig,
     if save_back and artifact is not None:
         try:
             retry_call(lambda: plan.save(pathlib.Path(artifact)),
-                       site="plan.save", policy=policy, sleep=sleep,
+                       site=faults.PLAN_SAVE, policy=policy, sleep=sleep,
                        clock=clock)
         except Exception as e:   # noqa: BLE001 — save-back is best-effort
             log.warning("plan save-back failed (%s: %s)",

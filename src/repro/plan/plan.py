@@ -260,12 +260,12 @@ class ExecutionPlan:
         p.parent.mkdir(parents=True, exist_ok=True)
         tmp = p.with_name(p.name + ".tmp")
         tmp.write_text(self.to_json())
-        faults.site("plan.save")
+        faults.site(faults.PLAN_SAVE)
         os.replace(tmp, p)
 
     @staticmethod
     def load(path: str | pathlib.Path) -> "ExecutionPlan":
-        faults.site("plan.load")
+        faults.site(faults.PLAN_LOAD)
         return ExecutionPlan.from_json(pathlib.Path(path).read_text())
 
     def summary(self) -> str:
@@ -321,7 +321,7 @@ class PlanCache:
 
     def _retry(self, fn):
         kw = {} if self._sleep is None else {"sleep": self._sleep}
-        return retry_call(fn, site="plan_cache.io", policy=self._io_policy,
+        return retry_call(fn, site=faults.PLAN_CACHE_IO, policy=self._io_policy,
                           **kw)
 
     def _quarantine(self, p: pathlib.Path, reason: str) -> None:
@@ -380,11 +380,11 @@ class PlanCache:
         return None
 
     def _disk_load(self, p: pathlib.Path) -> ExecutionPlan:
-        faults.site("plan_cache.io")
+        faults.site(faults.PLAN_CACHE_IO)
         return ExecutionPlan.load(p)
 
     def _disk_store(self, plan: ExecutionPlan, p: pathlib.Path) -> None:
-        faults.site("plan_cache.io")
+        faults.site(faults.PLAN_CACHE_IO)
         plan.save(p)
 
     def put(self, plan: ExecutionPlan) -> None:

@@ -27,6 +27,7 @@ per-site injection counts, resolved tiers) for the CI artifact upload.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import pathlib
 import sys
@@ -355,14 +356,23 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="network phase only (faster)")
     ap.add_argument("--report", default=None, metavar="PATH",
                     help="write a JSON fault/degradation report here")
+    ap.add_argument("--keep-dir", default=None, metavar="DIR",
+                    help="run in DIR and keep it (plan artifacts survive for "
+                         "`python -m repro.check plan DIR`); default is a "
+                         "temp dir removed on exit")
     args = ap.parse_args(argv)
 
     from repro import obs
     from repro.runtime import faults
 
     report = {"seed": args.seed}
-    with tempfile.TemporaryDirectory(prefix="chaos-") as td:
-        tmp = pathlib.Path(td)
+    with contextlib.ExitStack() as stack:
+        if args.keep_dir:
+            tmp = pathlib.Path(args.keep_dir)
+            tmp.mkdir(parents=True, exist_ok=True)
+        else:
+            tmp = pathlib.Path(stack.enter_context(
+                tempfile.TemporaryDirectory(prefix="chaos-")))
         obs.reset()
         obs.enable(str(tmp / "chaos-trace.jsonl"))
         try:

@@ -37,7 +37,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 from repro import obs
 
 from . import faults
-from .faults import STEP_FAULT_TYPES  # noqa: F401  (canonical home moved)
+from .faults import STEP_FAULT_TYPES
 from .retry import RetryPolicy
 
 
@@ -72,7 +72,7 @@ class HeartbeatRegistry:
 
     def beat(self, host: str) -> None:
         try:
-            faults.site("heartbeat")
+            faults.site(faults.HEARTBEAT)
         except STEP_FAULT_TYPES as e:
             # an injected fault here models a lost liveness packet: the beat
             # is dropped (the host will look dead if drops persist), the

@@ -384,7 +384,7 @@ class ServeEngine:
             obs.inc_counter("serve.rejected", reason="stopped")
             raise QueueFullError("engine is not running", reason="stopped")
         try:
-            faults.site("serve.queue")
+            faults.site(faults.SERVE_QUEUE)
         except faults.STEP_FAULT_TYPES as e:
             obs.inc_counter("serve.rejected", reason="fault")
             raise QueueFullError(

@@ -1,0 +1,220 @@
+"""Tests for the ``repro.check`` static-analysis gate.
+
+Covers the four checker families plus the registries they lean on:
+
+* plan artifact linter — mutation tests corrupt one invariant at a time on
+  a copy of ``plan_mobilenet_v3.json`` and assert the *exact* rule id fires,
+  and every golden/fixture passes clean;
+* mirrored constants (``COMPAT_VERSIONS``, ``BUFFER_TENSORS``) cannot drift
+  from their runtime homes without a test failure here;
+* ``FaultSchedule`` rejects unregistered sites at construction;
+* the source linters (registry / api-boundary / thread) catch their planted
+  violations and the pragma escape hatch silences them;
+* ``repro.check.smoke`` passes and the repo itself lints clean.
+"""
+import copy
+import json
+import pathlib
+
+import pytest
+
+from repro import check
+from repro.check import api_lint, plan_lint, registry_lint, smoke, thread_lint
+from repro.check.__main__ import run_default
+from repro.core.dataflow import BUFFER_TENSORS as CORE_BUFFER_TENSORS
+from repro.plan.plan import COMPAT_VERSIONS as PLAN_COMPAT_VERSIONS
+from repro.runtime.faults import (SITES, FaultSchedule, SiteSpec,
+                                  UnknownSiteError)
+
+GOLDENS = pathlib.Path(__file__).parent / "goldens"
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _golden(name):
+    return json.loads((GOLDENS / name).read_text())
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------- mirrors
+
+def test_plan_lint_mirrors_runtime_constants():
+    # the linter must run without jax, so it mirrors rather than imports;
+    # this test is the drift guard
+    assert plan_lint.COMPAT_VERSIONS == PLAN_COMPAT_VERSIONS
+    assert plan_lint.BUFFER_TENSORS == CORE_BUFFER_TENSORS
+
+
+def test_registry_rules_all_documented():
+    assert set(smoke._PLANTED) == set(check.RULES)
+
+
+# ---------------------------------------------------------- goldens clean
+
+@pytest.mark.parametrize("name", sorted(
+    p.name for p in GOLDENS.glob("*.json")
+    if p.name != "tile_dram_pr4_fixture.json"))
+def test_goldens_lint_clean(name):
+    doc = _golden(name)
+    assert plan_lint.looks_like_plan(doc)
+    assert plan_lint.check_plan(doc, name) == []
+
+
+def test_check_paths_over_goldens_dir():
+    findings = plan_lint.check_paths([GOLDENS], root=GOLDENS.parent)
+    assert findings == []
+
+
+# ------------------------------------------------------- mutation tests
+
+@pytest.fixture
+def mobilenet():
+    return _golden("plan_mobilenet_v3.json")
+
+
+def test_mutation_bad_version(mobilenet):
+    mobilenet["version"] = 99
+    assert _rules(plan_lint.check_plan(mobilenet, "m")) == {"plan-version"}
+
+
+def test_mutation_field_from_future_version(mobilenet):
+    # a v2 plan may not carry v4-only step fields
+    doc = copy.deepcopy(mobilenet)
+    doc["version"] = 2
+    for s in doc["steps"]:
+        for k in ("double_buffer", "buffer_alloc", "fused_with",
+                  "dram_stall_cycles"):
+            s.pop(k, None)
+    doc["steps"][0]["buffer_alloc"] = ["iact"]
+    assert _rules(plan_lint.check_plan(doc, "m")) == {"plan-version"}
+
+
+def test_mutation_broken_fuse_chain(mobilenet):
+    # fused_with must point at i+1; anything else breaks the chain
+    mobilenet["steps"][3]["fused_with"] = 6
+    assert _rules(plan_lint.check_plan(mobilenet, "m")) == {"plan-fused-chain"}
+
+
+def test_mutation_last_step_fused(mobilenet):
+    n = len(mobilenet["steps"])
+    mobilenet["steps"][n - 1]["fused_with"] = n
+    assert _rules(plan_lint.check_plan(mobilenet, "m")) == {"plan-fused-chain"}
+
+
+def test_mutation_boundary_discontinuity(mobilenet):
+    mobilenet["steps"][2]["in_layout"] = "ZZZ_BOGUS"
+    assert _rules(plan_lint.check_plan(mobilenet, "m")) == {"plan-boundary"}
+
+
+def test_mutation_join_forward_reference(mobilenet):
+    # step 5's join consumes step 4; point it at a later step instead
+    assert mobilenet["steps"][5]["joins"]
+    mobilenet["steps"][5]["joins"][0]["src"] = 7
+    assert _rules(plan_lint.check_plan(mobilenet, "m")) == {"plan-join"}
+
+
+def test_mutation_join_layout_mismatch(mobilenet):
+    mobilenet["steps"][5]["joins"][0]["src_layout"] = "ZZZ_BOGUS"
+    assert _rules(plan_lint.check_plan(mobilenet, "m")) == {"plan-join"}
+
+
+def test_mutation_alloc_unknown_tensor(mobilenet):
+    mobilenet["steps"][1]["buffer_alloc"] = ["iact", "bogus"]
+    assert _rules(plan_lint.check_plan(mobilenet, "m")) == {"plan-buffer-alloc"}
+
+
+def test_mutation_alloc_duplicate(mobilenet):
+    mobilenet["steps"][1]["buffer_alloc"] = ["iact", "iact"]
+    assert _rules(plan_lint.check_plan(mobilenet, "m")) == {"plan-buffer-alloc"}
+
+
+def test_mutation_alloc_all_three_unnormalized(mobilenet):
+    # ping-ponging every tensor must be stored as double_buffer=True + []
+    mobilenet["steps"][1]["buffer_alloc"] = ["iact", "w", "oact"]
+    assert _rules(plan_lint.check_plan(mobilenet, "m")) == {"plan-buffer-alloc"}
+
+
+def test_mutation_alloc_conflicts_with_double_buffer(mobilenet):
+    step = mobilenet["steps"][1]
+    assert step["buffer_alloc"]
+    step["double_buffer"] = True
+    assert _rules(plan_lint.check_plan(mobilenet, "m")) == {"plan-buffer-alloc"}
+
+
+# ------------------------------------------------------- fault registry
+
+def test_fault_schedule_rejects_unknown_site():
+    with pytest.raises(UnknownSiteError, match="plan.lod"):
+        FaultSchedule(sites={"plan.lod": SiteSpec(exc="OSError")})
+
+
+def test_fault_schedule_accepts_registered_sites():
+    FaultSchedule(sites={s: SiteSpec(exc="OSError") for s in sorted(SITES)})
+
+
+# ------------------------------------------------------- source linters
+
+def test_registry_lint_flags_unknown_site_literal():
+    src = ('from repro.runtime import faults\n'
+           'faults.site("plan.lod")\n')
+    assert _rules(registry_lint.check_source(src, "src/repro/x.py")) \
+        == {"site-unknown"}
+
+
+def test_registry_lint_flags_unknown_metric_and_label():
+    src = ('from repro import obs\n'
+           'obs.inc_counter("serve.requsts")\n'
+           'obs.inc_counter("plan_cache.hit", tiers="mem")\n')
+    findings = registry_lint.check_source(src, "src/repro/x.py")
+    assert _rules(findings) == {"obs-unknown", "obs-label"}
+
+
+def test_api_lint_flags_deep_import_from_example():
+    src = 'from repro.plan import Plan\n'
+    assert _rules(api_lint.check_source(src, "examples/foo.py")) \
+        == {"api-boundary"}
+    # the same import is fine outside the app dirs
+    assert api_lint.check_source(src, "src/repro/serve/foo.py") == []
+
+
+def test_api_lint_flags_upward_import_from_core():
+    src = 'from repro.serve import engine\n'
+    assert _rules(api_lint.check_source(src, "src/repro/core/foo.py")) \
+        == {"layering"}
+
+
+def test_thread_lint_flags_unguarded_write():
+    src = ('import threading\n'
+           'class W:\n'
+           '    def start(self):\n'
+           '        threading.Thread(target=self._loop).start()\n'
+           '    def _loop(self):\n'
+           '        self.n = 1\n')
+    assert _rules(thread_lint.check_source(src, "src/repro/x.py")) \
+        == {"thread-unguarded"}
+    guarded = src.replace("        self.n = 1",
+                          "        with self._lock:\n            self.n = 1")
+    assert thread_lint.check_source(guarded, "src/repro/x.py") == []
+
+
+def test_pragma_silences_findings():
+    src = ('from repro import obs\n'
+           'obs.inc_counter("totally.bogus")  # check: ignore[obs-unknown]\n')
+    findings = registry_lint.check_source(src, "src/repro/x.py")
+    assert _rules(findings) == {"obs-unknown"}
+    assert check.apply_pragmas(findings, src) == []
+
+
+# ----------------------------------------------------------- end to end
+
+def test_smoke_catches_every_planted_rule(capsys):
+    assert smoke.run() == 0
+    out = capsys.readouterr().out
+    assert "all caught" in out
+
+
+@pytest.mark.slow
+def test_repo_lints_clean():
+    assert run_default(REPO) == []
